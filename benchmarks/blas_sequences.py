@@ -1,0 +1,102 @@
+"""Paper Tables 2+3: fused vs unfused BLAS sequences.
+
+Adaptation for the CPU container (DESIGN.md §2):
+  * wall time — jnp backend: fused = compiler-chosen kernel grouping
+    (one jit per group), unfused = one jit per elementary call (the
+    CUBLAS-dispatch model).  XLA-on-CPU stands in for the GPU here; the
+    *decision structure* being benchmarked is the compiler's.
+  * HBM traffic — exact, computed from the chosen combination by the
+    same accounting the paper uses (bytes that must cross the global-
+    memory boundary).  Traffic ratio unfused/fused is architecture-
+    independent and is what produced the paper's speedups.
+  * v5e prediction — traffic / 819 GB/s, the memory-bound roofline time
+    on the target hardware, reported per sequence.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.blas import REGISTRY, make_inputs
+from repro.core import FusionCompiler, scheduler
+
+N_DEFAULT = 2048
+
+
+def _time_call(fn, inputs, iters=5) -> float:
+    import jax
+    out = fn(**inputs)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(**inputs)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run_sequence(name: str, n: int = N_DEFAULT, iters: int = 5) -> dict:
+    seq = REGISTRY[name]
+    cc = FusionCompiler()
+    g = cc.trace(seq.script, seq.shapes(n))
+    space = cc.space(g)
+    best = scheduler.best_combination(space)
+    unfused = scheduler.unfused_combination(space)
+
+    from repro.core import codegen
+    prog_f = codegen.compile_combination(g, best, backend="jnp")
+    prog_u = codegen.compile_combination(g, unfused, backend="jnp")
+    inputs = make_inputs(seq, n)
+
+    t_f = _time_call(prog_f, inputs, iters)
+    t_u = _time_call(prog_u, inputs, iters)
+
+    traffic_f = sum(i.traffic_bytes for i in best.impls)
+    traffic_u = sum(i.traffic_bytes for i in unfused.impls)
+    flops = seq.flops(n)
+    return {
+        "name": name, "tag": seq.tag, "n": n,
+        "t_fused_us": t_f * 1e6, "t_unfused_us": t_u * 1e6,
+        "speedup_measured": t_u / t_f,
+        "traffic_fused_MB": traffic_f / 1e6,
+        "traffic_unfused_MB": traffic_u / 1e6,
+        "traffic_ratio": traffic_u / traffic_f,
+        "pred_v5e_fused_us": traffic_f / 819e9 * 1e6,
+        "pred_v5e_unfused_us": traffic_u / 819e9 * 1e6,
+        "gflops_fused_v5e": flops / (traffic_f / 819e9) / 1e9,
+        "kernels_fused": len(best.impls),
+        "kernels_unfused": len(unfused.impls),
+    }
+
+
+# paper Table 2 speedups for comparison (GTX 480 vs CUBLAS)
+PAPER_SPEEDUP = {"AXPYDOT": 1.94, "ATAX": 1.03, "BiCGK": 1.61, "SGEMV": 1.05,
+                 "SGEMVT": 1.03, "SSCAL": 1.05, "GEMVER": 2.61, "GESUMMV": 1.0,
+                 "MADD": 1.47, "VADD": 2.26, "WAXPBY": 1.93}
+
+
+def run_all(n: int = N_DEFAULT, iters: int = 5):
+    rows = []
+    for name in REGISTRY:
+        r = run_sequence(name, n, iters)
+        r["paper_speedup"] = PAPER_SPEEDUP.get(name)
+        rows.append(r)
+    return rows
+
+
+def main():
+    rows = run_all()
+    print(f"{'seq':9s} {'tag':4s} {'kern f/u':>8s} {'traffic ratio':>13s} "
+          f"{'meas speedup':>12s} {'paper':>6s} {'v5e pred us (f)':>15s}")
+    for r in rows:
+        print(f"{r['name']:9s} {r['tag']:4s} "
+              f"{r['kernels_fused']}/{r['kernels_unfused']:>6d} "
+              f"{r['traffic_ratio']:13.2f} {r['speedup_measured']:12.2f} "
+              f"{r['paper_speedup'] or 0:6.2f} {r['pred_v5e_fused_us']:15.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

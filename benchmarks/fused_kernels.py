@@ -1,0 +1,105 @@
+"""Framework-side fused-kernel benchmarks: the paper's technique applied
+beyond BLAS — fused AdamW (via the fusion compiler), fused RMSNorm and
+softmax-xent.  Reports measured CPU time (jnp/XLA backend) and the exact
+HBM-traffic accounting that determines the TPU win."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _t(fn, *a, iters=5, **kw):
+    jax.block_until_ready(fn(*a, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*a, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def bench_adamw(n: int, iters: int = 5) -> list[str]:
+    from repro.optim import fused_adamw_update, make_fused_adamw
+    rng = np.random.default_rng(0)
+    p, g = (jnp.asarray(rng.standard_normal(n), jnp.float32) for _ in "pg")
+    m = jnp.zeros(n, jnp.float32)
+    v = jnp.zeros(n, jnp.float32) + 0.1
+
+    kw = dict(lr=1e-3, weight_decay=0.1, step=5)
+    t_fused = _t(lambda: fused_adamw_update(p, g, m, v, **kw), iters=iters)
+    # unfused: each elementary map its own kernel
+    from repro.optim.fused import make_fused_adamw as mk
+    prog_u = mk(n, "jnp", mode="unfused")
+    sf = jnp.float32(5.0)
+    ins = dict(p=p, grad=g, m=m, v=v, lr=jnp.float32(1e-3),
+               b1=jnp.float32(0.9), b2=jnp.float32(0.95),
+               eps=jnp.float32(1e-8), wd=jnp.float32(0.1),
+               c1=1/(1-0.9**sf), c2=1/(1-0.95**sf))
+    t_unf = _t(lambda: prog_u(**ins), iters=iters)
+    # traffic: fused reads p,g,m,v + writes p,m,v = 7n·4B;
+    # unfused adds u round-trip + extra reads = 13n·4B
+    return [
+        f"ADAMW_fused_n{n},{t_fused:.1f},traffic=28B/param",
+        f"ADAMW_unfused_n{n},{t_unf:.1f},"
+        f"speedup={t_unf/max(t_fused,1e-9):.2f}x traffic=52B/param",
+    ]
+
+
+def bench_rmsnorm(T: int, D: int, iters: int = 5) -> list[str]:
+    from repro.kernels import ref
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((T, D)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal(D), jnp.float32)
+    fused = jax.jit(ref.rmsnorm)
+
+    @jax.jit
+    def unfused_stage1(x):
+        return jnp.mean(x * x, axis=-1, keepdims=True)
+
+    @jax.jit
+    def unfused_stage2(x, ms, g):
+        return x * jax.lax.rsqrt(ms + 1e-6) * g
+
+    t_f = _t(fused, x, g, iters=iters)
+    t_u = _t(lambda: unfused_stage2(x, unfused_stage1(x), g), iters=iters)
+    return [f"RMSNORM_fused_{T}x{D},{t_f:.1f},2_streams",
+            f"RMSNORM_unfused_{T}x{D},{t_u:.1f},"
+            f"speedup={t_u/max(t_f,1e-9):.2f}x 4_streams"]
+
+
+def bench_xent(T: int, V: int, iters: int = 5) -> list[str]:
+    from repro.kernels import ref
+    rng = np.random.default_rng(0)
+    lg = jnp.asarray(rng.standard_normal((T, V)), jnp.float32)
+    lb = jnp.asarray(rng.integers(0, V, T), jnp.int32)
+    fused = jax.jit(ref.softmax_xent)
+
+    @jax.jit
+    def unfused(lg, lb):
+        p = jax.nn.softmax(lg, axis=-1)           # materializes probs
+        ll = jnp.take_along_axis(jnp.log(p + 1e-30), lb[:, None], axis=-1)
+        return -jnp.mean(ll)
+
+    t_f = _t(fused, lg, lb, iters=iters)
+    t_u = _t(unfused, lg, lb, iters=iters)
+    return [f"XENT_fused_{T}x{V},{t_f:.1f},1_logit_stream",
+            f"XENT_unfused_{T}x{V},{t_u:.1f},"
+            f"speedup={t_u/max(t_f,1e-9):.2f}x 3_logit_streams"]
+
+
+def run_all(quick: bool = False) -> list[str]:
+    n = 1 << 20 if quick else 1 << 22
+    iters = 3 if quick else 5
+    rows = []
+    rows += bench_adamw(n, iters)
+    rows += bench_rmsnorm(2048 if quick else 8192, 1024, iters)
+    rows += bench_xent(512 if quick else 2048, 32000, iters)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run_all():
+        print(r)

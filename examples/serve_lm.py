@@ -1,0 +1,17 @@
+"""Serving example: batched prefill + greedy decode with an on-mesh KV
+cache, for a GQA arch and an attention-free SSM arch (O(1)-state decode).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_launcher
+
+def main():
+    for arch in ("qwen2_7b", "mamba2_2p7b"):
+        print(f"=== {arch} ===")
+        serve_launcher.main([
+            "--arch", arch, "--smoke", "--batch", "4",
+            "--prompt-len", "32", "--gen", "16",
+        ])
+
+if __name__ == "__main__":
+    main()

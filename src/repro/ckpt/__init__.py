@@ -1,0 +1,7 @@
+"""repro.ckpt — checkpointing + fault tolerance."""
+from .checkpoint import AsyncCheckpointer, latest_step, restore, save
+from .fault_tolerance import (Heartbeat, PreemptionGuard, StepWatchdog,
+                              plan_remesh)
+
+__all__ = ["AsyncCheckpointer", "Heartbeat", "PreemptionGuard",
+           "StepWatchdog", "latest_step", "plan_remesh", "restore", "save"]

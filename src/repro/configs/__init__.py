@@ -1,0 +1,6 @@
+"""repro.configs — one module per assigned architecture."""
+from .base import (ARCHS, SHAPES, SUBQUADRATIC, ModelConfig, ShapeConfig,
+                   get_config, smoke_config, supported_cells)
+
+__all__ = ["ARCHS", "SHAPES", "SUBQUADRATIC", "ModelConfig", "ShapeConfig",
+           "get_config", "smoke_config", "supported_cells"]

@@ -1,0 +1,13 @@
+"""granite-3-8b [dense]: 40L d_model=4096 32H (GQA kv=8) d_ff=12800
+vocab=49155 [hf:ibm-granite/granite-3.0-2b-base family]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite3_8b", family="dense", n_layers=40, d_model=4096,
+    n_heads=32, n_kv_heads=8, d_ff=12800, vocab=49155,
+)
+
+SMOKE = ModelConfig(
+    name="granite3_8b_smoke", family="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+)

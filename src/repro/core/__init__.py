@@ -1,0 +1,21 @@
+"""repro.core — the paper's contribution: a fusion compiler for
+map/reduce elementary functions (Filipovič et al., 2013)."""
+from .compiler import CompileReport, FusionCompiler
+from .elementary import (ArgSpec, Elementary, Kind, Monoid, make_map,
+                         make_nested_map, make_nested_map_reduce, make_reduce)
+from .fusion import Fusion, analyse_group, enumerate_fusions, saves_traffic
+from .graph import CallNode, Graph, Var, trace
+from .predictor import V5E, HardwareModel, Impl, enumerate_impls
+from .scheduler import (Combination, OptimizationSpace, best_combination,
+                        build_space, enumerate_combinations,
+                        unfused_combination)
+
+__all__ = [
+    "ArgSpec", "CallNode", "Combination", "CompileReport", "Elementary",
+    "Fusion", "FusionCompiler", "Graph", "HardwareModel", "Impl", "Kind",
+    "Monoid", "OptimizationSpace", "V5E", "Var", "analyse_group",
+    "best_combination", "build_space", "enumerate_combinations",
+    "enumerate_fusions", "enumerate_impls", "make_map", "make_nested_map",
+    "make_nested_map_reduce", "make_reduce", "saves_traffic", "trace",
+    "unfused_combination",
+]

@@ -1,0 +1,260 @@
+"""Code generation: combinations → executable JAX programs (paper §4.3).
+
+Two backends:
+
+* ``jnp`` — each fused group becomes one separately ``jax.jit``-compiled
+  function (kernel boundary == jit boundary == the paper's global
+  barrier).  Inside a group XLA fuses the glued elementary functions; the
+  *decision* of what lives in one kernel is the compiler's, exactly as in
+  the paper.  This backend runs anywhere (CPU container included).
+* ``pallas`` — each fused group becomes ONE ``pl.pallas_call`` with
+  explicit BlockSpec VMEM tiling.  The kernel body is produced by gluing
+  elementary ``fn`` routines over a VMEM namespace (Algorithm 1/2):
+  loads are synthesized BlockSpecs (invariant loads = index maps that
+  ignore grid axes, the paper's line-4 hoisting), reductions either
+  accumulate into revisited output blocks (reduce axes innermost — the
+  paper's "accumulable outputs") or emit per-grid-cell partials combined
+  after the kernel (the paper's "extra kernel" finalization §3.2.2(i)).
+
+TPUs have no atomics, so the paper's ``atomicAdd`` variant (iii) is not
+available — this is a documented hardware adaptation (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .elementary import Monoid
+from .fusion import Fusion
+from .graph import Graph, Var
+from .predictor import Impl, accumulable, reduce_roots_of
+from .scheduler import Combination
+
+
+# ---------------------------------------------------------------------------
+# dense reference (oracle): evaluate the whole graph, no kernel structure
+# ---------------------------------------------------------------------------
+
+def execute_dense(g: Graph, env: dict[str, Any]):
+    vals: dict[Var, Any] = {v: jnp.asarray(env[v.name]) for v in g.inputs}
+    for c in g.calls:
+        vals[c.out] = c.elem.fn(*[vals[a] for a in c.args])
+    outs = tuple(vals[v] for v in g.outputs)
+    return outs[0] if len(outs) == 1 else outs
+
+
+# ---------------------------------------------------------------------------
+# group executors
+# ---------------------------------------------------------------------------
+
+def _group_dense_fn(f: Fusion) -> Callable:
+    """Pure function (ext_inputs...) -> (outputs...) for one fused group."""
+
+    def run(*ext_vals):
+        vals = dict(zip(f.external_inputs, ext_vals))
+        for c in f.calls:
+            vals[c.out] = c.elem.fn(*[vals[a] for a in c.args])
+        return tuple(vals[v] for v in f.outputs)
+
+    run.__name__ = "fused_" + "_".join(c.elem.name for c in f.calls)
+    return run
+
+
+def _monoid_sum(monoid: Monoid, x, axes):
+    if monoid is Monoid.SUM:
+        return jnp.sum(x, axis=axes)
+    if monoid is Monoid.MAX:
+        return jnp.max(x, axis=axes)
+    return jnp.min(x, axis=axes)
+
+
+def _group_pallas_fn(g: Graph, impl: Impl, interpret: bool = True) -> Callable:
+    """Build the single pallas_call for one fused group."""
+    f = impl.fusion
+    order, grid = impl.order, impl.grid
+    pos = {r: i for i, r in enumerate(order)}
+    blk = {r: b for r, b in zip(order, impl.blocks)}
+
+    def roots_of(v: Var) -> tuple[int, ...]:
+        return tuple(g.axis_root(a) for a in v.axis_ids)
+
+    def make_index_map(vroots: tuple[int, ...], lead_zeros: int = 0,
+                       lead_roots: tuple[int, ...] = ()):
+        def index_map(*gids):
+            lead = tuple(gids[pos[r]] for r in lead_roots)
+            body = tuple(gids[pos[r]] for r in vroots)
+            return (0,) * lead_zeros + lead + body
+        return index_map
+
+    # ---- input specs ------------------------------------------------------
+    in_specs, in_is_scalar = [], []
+    for v in f.external_inputs:
+        if v.shape == ():
+            in_specs.append(pl.BlockSpec((1, 1), lambda *g_: (0, 0)))
+            in_is_scalar.append(True)
+        else:
+            vr = roots_of(v)
+            in_specs.append(pl.BlockSpec(tuple(blk[r] for r in vr),
+                                         make_index_map(vr)))
+            in_is_scalar.append(False)
+
+    # ---- output specs -----------------------------------------------------
+    out_specs, out_shapes, out_mode = [], [], []
+    # out_mode: ('map',), ('acc', reduce_pos), ('partial', rr, lead_shape)
+    for v in f.outputs:
+        vr = roots_of(v)
+        rr = reduce_roots_of(v, f, g)
+        if not rr:
+            out_specs.append(pl.BlockSpec(tuple(blk[r] for r in vr),
+                                          make_index_map(vr)))
+            out_shapes.append(jax.ShapeDtypeStruct(v.shape, jnp.float32))
+            out_mode.append(("map", None))
+        elif accumulable(v, f, g, order):
+            if v.shape == ():  # full reduction to scalar: (1,1) carrier
+                out_specs.append(pl.BlockSpec((1, 1), lambda *g_: (0, 0)))
+                out_shapes.append(jax.ShapeDtypeStruct((1, 1), jnp.float32))
+            else:
+                out_specs.append(pl.BlockSpec(tuple(blk[r] for r in vr),
+                                              make_index_map(vr)))
+                out_shapes.append(jax.ShapeDtypeStruct(v.shape, jnp.float32))
+            out_mode.append(("acc", tuple(pos[r] for r in rr)))
+        else:
+            lead = tuple(grid[pos[r]] for r in rr)
+            block = (1,) * len(rr) + tuple(blk[r] for r in vr)
+            out_specs.append(pl.BlockSpec(
+                block, make_index_map(vr, lead_roots=rr)))
+            out_shapes.append(jax.ShapeDtypeStruct(lead + v.shape, jnp.float32))
+            out_mode.append(("partial", tuple(range(len(rr)))))
+
+    n_in = len(f.external_inputs)
+    out_index = {v: i for i, v in enumerate(f.outputs)}
+
+    def kernel(*refs):
+        in_refs, out_refs = refs[:n_in], refs[n_in:]
+        env: dict[Var, Any] = {}
+        for v, ref, is_scalar in zip(f.external_inputs, in_refs, in_is_scalar):
+            env[v] = ref[0, 0] if is_scalar else ref[...]
+        for c in f.calls:
+            val = c.elem.fn(*[env[a] for a in c.args])
+            if not c.elem.is_reduction:
+                env[c.out] = val  # legality: only pure-map values flow inside
+            if c.out in out_index:
+                i = out_index[c.out]
+                mode, aux = out_mode[i]
+                ref = out_refs[i]
+                if mode == "map":
+                    ref[...] = val.astype(ref.dtype)
+                elif mode == "acc":
+                    if c.out.shape == ():
+                        val = jnp.reshape(val, (1, 1))
+                    is_first = functools.reduce(
+                        jnp.logical_and,
+                        [pl.program_id(p) == 0 for p in aux])
+
+                    @pl.when(is_first)
+                    def _init(ref=ref, val=val):
+                        ref[...] = val.astype(ref.dtype)
+
+                    @pl.when(jnp.logical_not(is_first))
+                    def _accum(ref=ref, val=val, m=c.elem.monoid):
+                        ref[...] = m.combine(ref[...], val.astype(ref.dtype))
+                else:  # partial
+                    lead = len(aux)
+                    ref[...] = jnp.reshape(val, (1,) * lead + val.shape
+                                           ).astype(ref.dtype)
+
+    call = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=tuple(out_shapes), interpret=interpret,
+    )
+
+    def run(*ext_vals):
+        vals = []
+        for v, x, is_scalar in zip(f.external_inputs, ext_vals, in_is_scalar):
+            x = jnp.asarray(x, jnp.float32)
+            vals.append(jnp.reshape(x, (1, 1)) if is_scalar else x)
+        raw = call(*vals)
+        outs = []
+        for v, r, (mode, aux) in zip(f.outputs, raw, out_mode):
+            c = v.producer
+            if mode == "partial":
+                r = _monoid_sum(c.elem.monoid, r, tuple(aux))
+            if v.shape == ():
+                r = jnp.reshape(r, ())
+            outs.append(r)
+        return tuple(outs)
+
+    run.__name__ = "pallas_" + "_".join(c.elem.name for c in f.calls)
+    return run
+
+
+# ---------------------------------------------------------------------------
+# whole-program executor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompiledProgram:
+    """Executable for one combination; groups run as separate kernels."""
+
+    graph: Graph
+    combination: Combination
+    group_fns: list[Callable]      # jitted, in topological group order
+    group_order: list[Impl]
+
+    def __call__(self, **inputs):
+        vals: dict[Var, Any] = {}
+        for v in self.graph.inputs:
+            if v.name not in inputs:
+                raise KeyError(f"missing input {v.name}")
+            vals[v] = inputs[v.name]
+        for impl, fn in zip(self.group_order, self.group_fns):
+            f = impl.fusion
+            outs = fn(*[vals[a] for a in f.external_inputs])
+            for v, o in zip(f.outputs, outs):
+                vals[v] = o
+        outs = tuple(vals[v] for v in self.graph.outputs)
+        return outs[0] if len(outs) == 1 else outs
+
+    def block_until_ready(self, result):
+        return jax.tree_util.tree_map(lambda x: x.block_until_ready(), result)
+
+
+def _topo_group_order(g: Graph, combo: Combination) -> list[Impl]:
+    remaining = list(combo.impls)
+    ready_vars = set(g.inputs)
+    ordered: list[Impl] = []
+    while remaining:
+        progressed = False
+        for im in list(remaining):
+            if all(a in ready_vars for a in im.fusion.external_inputs):
+                ordered.append(im)
+                ready_vars |= set(im.fusion.outputs)
+                ready_vars |= set(im.fusion.internal_vars)
+                remaining.remove(im)
+                progressed = True
+        if not progressed:
+            raise RuntimeError("cyclic combination — scheduler bug")
+    return ordered
+
+
+def compile_combination(g: Graph, combo: Combination, backend: str = "jnp",
+                        interpret: bool = True, jit: bool = True
+                        ) -> CompiledProgram:
+    order = _topo_group_order(g, combo)
+    fns = []
+    for im in order:
+        if backend == "jnp":
+            fn = _group_dense_fn(im.fusion)
+        elif backend == "pallas":
+            fn = _group_pallas_fn(g, im, interpret=interpret)
+        else:
+            raise ValueError(f"unknown backend {backend}")
+        fns.append(jax.jit(fn) if jit else fn)
+    return CompiledProgram(graph=g, combination=combo, group_fns=fns,
+                           group_order=order)

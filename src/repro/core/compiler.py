@@ -1,0 +1,111 @@
+"""Facade: the source-to-source fusion compiler (paper §4).
+
+Typical use::
+
+    from repro.core import compiler
+    cc = compiler.FusionCompiler()                 # v5e cost model
+    prog = cc.compile(script, {"A": (4096, 4096), "p": (4096,), "r": (4096,)})
+    q, s = prog(A=A, p=p, r=r)
+
+``compile`` runs the three paper stages: parse/trace, optimization-space
+generation + search, code generation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+from . import codegen, graph, scheduler
+from .predictor import V5E, HardwareModel
+from .scheduler import Combination, OptimizationSpace
+
+
+@dataclasses.dataclass
+class CompileReport:
+    n_fusions: int
+    n_impls: int
+    n_combinations: int
+    t_trace_s: float
+    t_space_s: float
+    t_codegen_s: float
+    best: Combination
+    unfused: Combination
+
+    @property
+    def predicted_speedup(self) -> float:
+        return self.unfused.t_pred / self.best.t_pred
+
+
+class FusionCompiler:
+    def __init__(self, hw: HardwareModel = V5E, backend: str = "jnp",
+                 interpret: bool = True, max_impls_per_fusion: int = 64):
+        self.hw = hw
+        self.backend = backend
+        self.interpret = interpret
+        self.max_impls = max_impls_per_fusion
+
+    # -- stages ------------------------------------------------------------
+    def trace(self, script: Callable, input_shapes: dict[str, Sequence[int]]
+              ) -> graph.Graph:
+        return graph.trace(script, input_shapes)
+
+    def space(self, g: graph.Graph) -> OptimizationSpace:
+        return scheduler.build_space(g, self.hw, self.max_impls)
+
+    # -- main entry points ---------------------------------------------------
+    def compile(self, script: Callable, input_shapes: dict[str, Sequence[int]],
+                mode: str = "best", backend: str | None = None,
+                report: bool = False):
+        """mode: 'best' (predicted-best combination), 'unfused'
+        (CUBLAS-style baseline), or an integer rank into the sorted
+        combination list (empirical-search support)."""
+        backend = backend or self.backend
+        t0 = time.perf_counter()
+        g = self.trace(script, input_shapes)
+        t1 = time.perf_counter()
+        space = self.space(g)
+        if mode == "best":
+            combo = scheduler.best_combination(space)
+        elif mode == "unfused":
+            combo = scheduler.unfused_combination(space)
+        elif isinstance(mode, int):
+            combos = scheduler.enumerate_combinations(space, limit=mode + 1)
+            combo = combos[min(mode, len(combos) - 1)]
+        else:
+            raise ValueError(f"bad mode {mode!r}")
+        t2 = time.perf_counter()
+        prog = codegen.compile_combination(
+            g, combo, backend=backend, interpret=self.interpret)
+        t3 = time.perf_counter()
+        if report:
+            rep = CompileReport(
+                n_fusions=len(space.fusions), n_impls=space.n_impls,
+                n_combinations=len(scheduler.enumerate_combinations(space,
+                                                                    limit=5000)),
+                t_trace_s=t1 - t0, t_space_s=t2 - t1, t_codegen_s=t3 - t2,
+                best=scheduler.best_combination(space),
+                unfused=scheduler.unfused_combination(space))
+            return prog, rep
+        return prog
+
+    def compile_all(self, script: Callable,
+                    input_shapes: dict[str, Sequence[int]],
+                    limit: int = 256, backend: str | None = None):
+        """Every combination (sorted by prediction) — empirical search."""
+        backend = backend or self.backend
+        g = self.trace(script, input_shapes)
+        space = self.space(g)
+        combos = scheduler.enumerate_combinations(space, limit=limit)
+        return [(c, codegen.compile_combination(g, c, backend=backend,
+                                                interpret=self.interpret))
+                for c in combos]
+
+    def oracle(self, script: Callable, input_shapes: dict[str, Sequence[int]]
+               ) -> Callable:
+        g = self.trace(script, input_shapes)
+
+        def run(**inputs):
+            return codegen.execute_dense(g, inputs)
+
+        return run

@@ -1,0 +1,193 @@
+"""Elementary functions — the unit the fusion compiler operates on.
+
+The paper (Filipovič et al.) restricts fusible kernels to ``map``,
+``reduce`` and their nested (depth-2) combinations.  We model all of them
+with a single *blocked iteration-space* abstraction:
+
+* every elementary function iterates over a set of named axes
+  (depth 1: ``('i',)``; depth 2: ``('i', 'j')``);
+* every argument is indexed by a subset of those axes (``()`` means the
+  argument is a broadcast scalar / "invariant" in the paper's terms);
+* the output is indexed by a subset of the axes; axes missing from the
+  output are *reduce axes* — the output is accumulated over them with the
+  elementary's monoid (``+`` by default).
+
+This covers the paper's taxonomy exactly:
+
+==========================  =========  ==========  ============
+paper's kind                axes       out axes    reduce axes
+==========================  =========  ==========  ============
+map                         (i,)       (i,)        —
+reduce                      (i,)       ()          (i,)
+nested map (mapped map)     (i, j)     (i, j)      —
+mapped reduce               (i, j)     (i,)/(j,)   (j,)/(i,)
+==========================  =========  ==========  ============
+
+The per-element first-order function ``fn`` is written *block-
+polymorphically*: it receives jnp arrays whose shapes are either the full
+operands (dense / XLA backend) or VMEM-resident blocks (Pallas backend)
+and must compute the same thing for both.  This is the analogue of the
+paper's requirement that a routine works for any block size chosen by the
+compiler (macros ``*_BY`` etc.).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Any, Callable, Sequence
+
+import jax.numpy as jnp
+
+
+class Kind(enum.Enum):
+    MAP = "map"                      # depth-1, no reduce axes
+    REDUCE = "reduce"                # depth-1, output ()
+    NESTED_MAP = "nested_map"        # depth-2, no reduce axes
+    NESTED_MAP_REDUCE = "nested_map_reduce"  # depth-2, one reduce axis
+
+
+class Monoid(enum.Enum):
+    SUM = "sum"
+    MAX = "max"
+    MIN = "min"
+
+    @property
+    def identity(self) -> float:
+        return {"sum": 0.0, "max": -jnp.inf, "min": jnp.inf}[self.value]
+
+    def combine(self, a, b):
+        if self is Monoid.SUM:
+            return a + b
+        if self is Monoid.MAX:
+            return jnp.maximum(a, b)
+        return jnp.minimum(a, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArgSpec:
+    """How one argument is indexed by the elementary's iteration axes.
+
+    ``axes`` is a tuple of axis *positions* into the elementary's formal
+    axis list, in the order they appear as array dimensions.  E.g. for a
+    depth-2 function with formal axes ``('i', 'j')``:
+
+    * ``axes=(0, 1)`` — a matrix indexed ``[i, j]`` (tile per grid cell)
+    * ``axes=(1,)``   — a vector indexed ``[j]`` (invariant over ``i``)
+    * ``axes=()``     — a scalar, invariant everywhere
+    """
+
+    axes: tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Elementary:
+    """A fusible elementary function (paper §4.3).
+
+    ``fn(*blocks) -> block`` is the compute routine; load/store routines
+    are synthesized by the code generator from the ArgSpecs (BlockSpec
+    index maps on the Pallas backend).
+    """
+
+    name: str
+    kind: Kind
+    formal_axes: tuple[str, ...]
+    in_specs: tuple[ArgSpec, ...]
+    out_axes: tuple[int, ...]          # positions of formal axes kept in output
+    fn: Callable[..., Any]
+    monoid: Monoid = Monoid.SUM
+    flops_per_point: float = 1.0       # arithmetic ops per iteration-space point
+    # element granularity per axis: the paper uses 32-subvectors / 32x32
+    # tiles; block sizes must be multiples of this.
+    elem: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        depth = len(self.formal_axes)
+        assert depth in (1, 2), "paper supports nesting depth <= 2"
+        for spec in self.in_specs:
+            assert all(0 <= a < depth for a in spec.axes)
+        assert all(0 <= a < depth for a in self.out_axes)
+        if not self.elem:
+            object.__setattr__(self, "elem", (1,) * depth)
+
+    @property
+    def depth(self) -> int:
+        return len(self.formal_axes)
+
+    @property
+    def reduce_axes(self) -> tuple[int, ...]:
+        return tuple(a for a in range(self.depth) if a not in self.out_axes)
+
+    @property
+    def is_reduction(self) -> bool:
+        return bool(self.reduce_axes)
+
+    def flops(self, axis_sizes: Sequence[int]) -> float:
+        return self.flops_per_point * math.prod(axis_sizes)
+
+
+def _as_f32(x):
+    return jnp.asarray(x, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Constructors for the common kinds (convenience API used by libraries).
+# ---------------------------------------------------------------------------
+
+def make_map(name: str, fn: Callable, arity: int, *, scalar_args: Sequence[int] = (),
+             flops_per_point: float = 1.0) -> Elementary:
+    """Depth-1 map over lists; ``scalar_args`` are broadcast () arguments."""
+    specs = tuple(
+        ArgSpec(() if i in set(scalar_args) else (0,)) for i in range(arity)
+    )
+    return Elementary(
+        name=name, kind=Kind.MAP, formal_axes=("i",), in_specs=specs,
+        out_axes=(0,), fn=fn, flops_per_point=flops_per_point,
+    )
+
+
+def make_reduce(name: str, monoid: Monoid = Monoid.SUM, *,
+                flops_per_point: float = 1.0) -> Elementary:
+    def fn(x):
+        if monoid is Monoid.SUM:
+            return jnp.sum(x)
+        if monoid is Monoid.MAX:
+            return jnp.max(x)
+        return jnp.min(x)
+
+    return Elementary(
+        name=name, kind=Kind.REDUCE, formal_axes=("i",),
+        in_specs=(ArgSpec((0,)),), out_axes=(), fn=fn, monoid=monoid,
+        flops_per_point=flops_per_point,
+    )
+
+
+def make_nested_map(name: str, fn: Callable, in_axes: Sequence[Sequence[int]], *,
+                    flops_per_point: float = 1.0, elem: tuple[int, int] = (8, 128)
+                    ) -> Elementary:
+    """Depth-2 map producing a matrix indexed (i, j)."""
+    return Elementary(
+        name=name, kind=Kind.NESTED_MAP, formal_axes=("i", "j"),
+        in_specs=tuple(ArgSpec(tuple(a)) for a in in_axes), out_axes=(0, 1),
+        fn=fn, flops_per_point=flops_per_point, elem=elem,
+    )
+
+
+def make_nested_map_reduce(name: str, fn: Callable,
+                           in_axes: Sequence[Sequence[int]],
+                           out_axis: int, *, monoid: Monoid = Monoid.SUM,
+                           flops_per_point: float = 2.0,
+                           elem: tuple[int, int] = (8, 128)) -> Elementary:
+    """Depth-2 map over ``out_axis`` of a reduce over the other axis.
+
+    E.g. gemv (out_axis=0, reduce over j):  y_i = sum_j A_ij x_j
+         gemtv (out_axis=1, reduce over i): s_j = sum_i A_ij r_i
+    ``fn`` must compute the *partial* reduction over the block it is given
+    (e.g. ``A_blk @ x_blk``); the compiler accumulates partials with the
+    monoid across blocks — the paper's "accumulable output" (Alg. 1).
+    """
+    return Elementary(
+        name=name, kind=Kind.NESTED_MAP_REDUCE, formal_axes=("i", "j"),
+        in_specs=tuple(ArgSpec(tuple(a)) for a in in_axes), out_axes=(out_axis,),
+        fn=fn, monoid=monoid, flops_per_point=flops_per_point, elem=elem,
+    )

@@ -1,0 +1,218 @@
+"""Implementation enumeration + performance prediction (paper §4.2).
+
+For each Fusion we enumerate *implementations* — the TPU analogue of the
+paper's (calling order, routine variant, block size, serial iterations):
+
+* a **grid order**: permutation of the fusion's iteration axes
+  (outermost→innermost).  The innermost axes act as the paper's "serial
+  iterations"; reductions whose reduce axes form the innermost suffix can
+  accumulate in VMEM ("accumulable outputs"), otherwise they emit
+  per-grid-cell partials combined by a follow-up step (the paper's
+  "extra kernel" reduction finalization, §3.2.2(i)).
+* **block sizes** per axis (must divide the axis size and respect the
+  128-lane / 8-sublane TPU tiling, the analogue of the paper's
+  32-element granularity).
+
+The predicted runtime is the paper's model:  ``t = max(t_transfer,
+t_compute) + t_launch`` assuming full overlap of DMA and compute
+(§4.2 "we assume full overlap of computation and data transfers").
+Dominated implementations (no better on traffic, flops and VMEM) are
+pruned, as the paper prunes implementations using more on-chip memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+
+import numpy as np
+
+from .fusion import Fusion
+from .graph import Graph, Var
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Calibrated machine constants (defaults: one TPU v5e core)."""
+
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12          # bf16; f32 ~ 98 TF/s, see scale below
+    f32_scale: float = 0.5              # MXU f32 derate
+    hbm_bw: float = 819e9               # bytes/s
+    vmem_bytes: int = 64 * 1024 * 1024  # usable VMEM budget (of 128 MiB)
+    launch_overhead_s: float = 2e-6     # per-kernel dispatch cost
+    # minimum efficient tile (sublane, lane) for f32
+    min_tile: tuple[int, int] = (8, 128)
+
+
+V5E = HardwareModel()
+
+
+@dataclasses.dataclass(frozen=True)
+class Impl:
+    """One concrete implementation of a Fusion."""
+
+    fusion: Fusion
+    order: tuple[int, ...]              # axis roots, outermost -> innermost
+    blocks: tuple[int, ...]             # block size per axis in `order`
+    traffic_bytes: float = 0.0
+    flops: float = 0.0
+    vmem_bytes: float = 0.0
+    t_transfer: float = 0.0
+    t_compute: float = 0.0
+    t_pred: float = 0.0
+
+    @property
+    def grid(self) -> tuple[int, ...]:
+        sizes = dict(zip(self.fusion.axis_roots, self.fusion.axis_sizes))
+        return tuple(-(-sizes[a] // b) for a, b in zip(self.order, self.blocks))
+
+    def block_of(self, root: int) -> int:
+        return self.blocks[self.order.index(root)]
+
+    def describe(self) -> str:
+        return (f"{self.fusion!r} order={self.order} blocks={self.blocks} "
+                f"grid={self.grid} traffic={self.traffic_bytes/1e6:.2f}MB "
+                f"flops={self.flops/1e6:.2f}MF vmem={self.vmem_bytes/1e3:.0f}KB "
+                f"t={self.t_pred*1e6:.2f}us")
+
+
+def _divisor_blocks(size: int, minimum: int, maximum: int | None = None) -> list[int]:
+    """Candidate block sizes: divisors of ``size`` that are multiples of
+    ``minimum`` (TPU tiling), plus the full size."""
+    maximum = maximum or size
+    out = []
+    b = minimum
+    while b <= min(size, maximum):
+        if size % b == 0:
+            out.append(b)
+        b *= 2
+    if size <= maximum and size not in out:
+        out.append(size)
+    return out or [size]
+
+
+def var_streams(v: Var, g: Graph, order: tuple[int, ...], grid: tuple[int, ...]) -> int:
+    """How many times ``v`` is streamed from HBM for a given grid order.
+
+    An input indexed by axis subset S is re-fetched whenever an axis
+    outside S, ordered *outer* than the innermost axis of S, advances
+    (Pallas refetches a block when its index map output changes).
+    """
+    s_roots = {g.axis_root(a) for a in v.axis_ids}
+    if not s_roots:
+        return 1
+    pos = {r: i for i, r in enumerate(order)}
+    inner_s = max(pos[r] for r in s_roots if r in pos) if any(r in pos for r in s_roots) else -1
+    n = 1
+    for i, r in enumerate(order):
+        if r not in s_roots and i < inner_s:
+            n *= grid[i]
+    return n
+
+
+def reduce_roots_of(v: Var, f: Fusion, g: Graph) -> tuple[int, ...]:
+    """Fusion axes over which output ``v`` is reduced."""
+    s_roots = {g.axis_root(a) for a in v.axis_ids}
+    return tuple(r for r in f.axis_roots if r not in s_roots)
+
+
+def accumulable(v: Var, f: Fusion, g: Graph, order: tuple[int, ...]) -> bool:
+    """True iff v's reduce axes are the innermost suffix of the grid order
+    — the in-VMEM accumulation case; else partials + combine."""
+    rr = set(reduce_roots_of(v, f, g))
+    if not rr:
+        return True
+    k = len(rr)
+    return set(order[-k:]) == rr
+
+
+def cost_impl(f: Fusion, g: Graph, order: tuple[int, ...],
+              blocks: tuple[int, ...], hw: HardwareModel, dtype_bytes: int = 4
+              ) -> Impl:
+    sizes = dict(zip(f.axis_roots, f.axis_sizes))
+    grid = tuple(-(-sizes[a] // b) for a, b in zip(order, blocks))
+    blk = dict(zip(order, blocks))
+
+    # ---- traffic ----------------------------------------------------------
+    traffic = 0.0
+    for v in f.external_inputs:
+        traffic += v.nbytes * var_streams(v, g, order, grid)
+    for v in f.outputs:
+        rr = reduce_roots_of(v, f, g)
+        if not rr or accumulable(v, f, g, order):
+            traffic += v.nbytes
+        else:
+            nparts = math.prod(grid[order.index(r)] for r in rr)
+            traffic += v.nbytes * (2 * nparts + 1)  # write parts, read parts, write final
+
+    # ---- flops ------------------------------------------------------------
+    flops = sum(c.elem.flops(c.axis_sizes) for c in f.calls)
+
+    # ---- VMEM footprint (double-buffered blocks) ---------------------------
+    def block_bytes(v: Var) -> float:
+        n = dtype_bytes
+        for a in v.axis_ids:
+            r = g.axis_root(a)
+            n *= blk.get(r, 1)
+        return max(n, dtype_bytes * hw.min_tile[0] * hw.min_tile[1])
+
+    vmem = 0.0
+    for v in f.external_inputs:
+        vmem += 2 * block_bytes(v)
+    for v in f.outputs:
+        vmem += 2 * block_bytes(v)
+    for v in f.internal_vars:
+        vmem += block_bytes(v)
+
+    t_t = traffic / hw.hbm_bw
+    t_c = flops / (hw.peak_flops * hw.f32_scale)
+    t = max(t_t, t_c) + hw.launch_overhead_s
+    return Impl(fusion=f, order=order, blocks=blocks, traffic_bytes=traffic,
+                flops=flops, vmem_bytes=vmem, t_transfer=t_t, t_compute=t_c,
+                t_pred=t)
+
+
+def enumerate_impls(f: Fusion, g: Graph, hw: HardwareModel = V5E,
+                    max_impls: int = 64) -> list[Impl]:
+    """All (order × block) implementations of a fusion, pruned.
+
+    Pruning (paper §4.2): drop implementations that exceed the VMEM
+    budget (the occupancy analogue) and Pareto-dominated ones.
+    """
+    roots, sizes = f.axis_roots, f.axis_sizes
+    depth = len(roots)
+    cands: list[Impl] = []
+    if depth == 1:
+        min_b = hw.min_tile[1]
+        for b in _divisor_blocks(sizes[0], min_b, maximum=1 << 22):
+            cands.append(cost_impl(f, g, roots, (b,), hw))
+    else:
+        min_i, min_j = hw.min_tile
+        blocks_per_axis = [
+            _divisor_blocks(sizes[0], min_i, maximum=1 << 16),
+            _divisor_blocks(sizes[1], min_j, maximum=1 << 16),
+        ]
+        for order in itertools.permutations(range(depth)):
+            o_roots = tuple(roots[i] for i in order)
+            for bs in itertools.product(*(blocks_per_axis[i] for i in order)):
+                cands.append(cost_impl(f, g, o_roots, bs, hw))
+
+    cands = [c for c in cands if c.vmem_bytes <= hw.vmem_bytes]
+    if not cands:
+        return []
+    # Pareto prune on (traffic, vmem); flops identical across impls
+    cands.sort(key=lambda c: (c.t_pred, c.vmem_bytes))
+    kept: list[Impl] = []
+    for c in cands:
+        if any(k.traffic_bytes <= c.traffic_bytes and k.vmem_bytes <= c.vmem_bytes
+               and (k.traffic_bytes, k.vmem_bytes) != (c.traffic_bytes, c.vmem_bytes)
+               for k in kept):
+            continue
+        if any(k.traffic_bytes == c.traffic_bytes and k.vmem_bytes == c.vmem_bytes
+               for k in kept):
+            continue
+        kept.append(c)
+        if len(kept) >= max_impls:
+            break
+    return kept

@@ -1,0 +1,131 @@
+"""Combination selection (paper §4.2, third step).
+
+A *combination of fusion implementations* is a partition of the call DAG
+into legal fusions (each with a chosen implementation) covering every
+call exactly once.  We search the partition lattice exactly (scripts are
+small) with a branch-and-bound over bitmasks, and can enumerate the
+k-best combinations for the empirical-search mode (paper Table 4/5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+
+from .fusion import Fusion, enumerate_fusions
+from .graph import Graph
+from .predictor import V5E, HardwareModel, Impl, enumerate_impls
+
+
+@dataclasses.dataclass
+class Combination:
+    impls: tuple[Impl, ...]
+    t_pred: float
+
+    def describe(self) -> str:
+        lines = [f"combination t_pred={self.t_pred*1e6:.2f}us"]
+        for im in self.impls:
+            lines.append("  " + im.describe())
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class OptimizationSpace:
+    graph: Graph
+    fusions: list[Fusion]
+    impls_by_fusion: dict[frozenset, list[Impl]]
+
+    @property
+    def n_impls(self) -> int:
+        return sum(len(v) for v in self.impls_by_fusion.values())
+
+
+def build_space(g: Graph, hw: HardwareModel = V5E, max_impls_per_fusion: int = 64
+                ) -> OptimizationSpace:
+    fusions = enumerate_fusions(g)
+    impls = {}
+    for f in fusions:
+        lst = enumerate_impls(f, g, hw, max_impls=max_impls_per_fusion)
+        if lst:
+            impls[f.key] = lst
+    fusions = [f for f in fusions if f.key in impls]
+    return OptimizationSpace(graph=g, fusions=fusions, impls_by_fusion=impls)
+
+
+def _partitions(space: OptimizationSpace):
+    """Yield all partitions of the call set into legal fusions (as tuples
+    of Fusion).  DFS always extends the lowest-index uncovered call."""
+    n = len(space.graph.calls)
+    by_lowest: dict[int, list[Fusion]] = {}
+    for f in space.fusions:
+        by_lowest.setdefault(min(f.key), []).append(f)
+
+    def rec(covered: frozenset, acc: tuple):
+        if len(covered) == n:
+            yield acc
+            return
+        lowest = min(i for i in range(n) if i not in covered)
+        for f in by_lowest.get(lowest, []):
+            if f.key & covered:
+                continue
+            yield from rec(covered | f.key, acc + (f,))
+
+    yield from rec(frozenset(), ())
+
+
+def enumerate_combinations(space: OptimizationSpace, limit: int | None = None
+                           ) -> list[Combination]:
+    """All combinations, sorted by predicted time (best first).
+
+    Within each partition, per-fusion implementations multiply; to keep
+    the space the same magnitude as the paper's (Table 4 reports products
+    of per-fusion variants), we expand the cross-product lazily in
+    predicted-time order and stop at ``limit``.
+    """
+    combos: list[Combination] = []
+    for part in _partitions(space):
+        impl_lists = [space.impls_by_fusion[f.key] for f in part]
+        # lazily expand cross product best-first with a heap
+        heap: list[tuple[float, tuple[int, ...]]] = []
+        start = tuple(0 for _ in impl_lists)
+        t0 = sum(il[0].t_pred for il in impl_lists)
+        heap = [(t0, start)]
+        seen = {start}
+        expanded = 0
+        cap = limit or 10_000
+        while heap and expanded < cap:
+            t, idxs = heapq.heappop(heap)
+            combos.append(Combination(
+                impls=tuple(il[i] for il, i in zip(impl_lists, idxs)), t_pred=t))
+            expanded += 1
+            for k in range(len(impl_lists)):
+                if idxs[k] + 1 < len(impl_lists[k]):
+                    nxt = idxs[:k] + (idxs[k] + 1,) + idxs[k + 1:]
+                    if nxt not in seen:
+                        seen.add(nxt)
+                        dt = (impl_lists[k][idxs[k] + 1].t_pred
+                              - impl_lists[k][idxs[k]].t_pred)
+                        heapq.heappush(heap, (t + dt, nxt))
+    combos.sort(key=lambda c: c.t_pred)
+    if limit is not None:
+        combos = combos[:limit]
+    return combos
+
+
+def best_combination(space: OptimizationSpace) -> Combination:
+    best: Combination | None = None
+    for part in _partitions(space):
+        impls = tuple(space.impls_by_fusion[f.key][0] for f in part)
+        t = sum(i.t_pred for i in impls)
+        if best is None or t < best.t_pred:
+            best = Combination(impls=impls, t_pred=t)
+    assert best is not None, "no legal combination covers the graph"
+    return best
+
+
+def unfused_combination(space: OptimizationSpace) -> Combination:
+    """The no-fusion baseline: every call its own kernel (CUBLAS-style)."""
+    singles = {min(f.key): f for f in space.fusions if len(f.key) == 1}
+    impls = tuple(space.impls_by_fusion[singles[i].key][0]
+                  for i in range(len(space.graph.calls)))
+    return Combination(impls=impls, t_pred=sum(i.t_pred for i in impls))

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """y = x / rms(x) * gamma, rowwise over the last dim."""
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def adamw(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay, step):
+    """One fused AdamW update; returns (p', m', v')."""
+    g32, p32 = g.astype(jnp.float32), p.astype(jnp.float32)
+    m = beta1 * m + (1 - beta1) * g32
+    v = beta2 * v + (1 - beta2) * (g32 * g32)
+    c1 = 1.0 / (1.0 - beta1 ** step)
+    c2 = 1.0 / (1.0 - beta2 ** step)
+    upd = (m * c1) / (jnp.sqrt(v * c2) + eps) + weight_decay * p32
+    return (p32 - lr * upd).astype(p.dtype), m, v
+
+
+def bicgk(A, p, r):
+    """q = A p ; s = A^T r."""
+    return (jnp.dot(A, p, precision="highest"),
+            jnp.dot(A.T, r, precision="highest"))
+
+
+def gemver(A, u1, v1, u2, v2, y, z, alpha, beta):
+    B = A + jnp.outer(u1, v1) + jnp.outer(u2, v2)
+    x = beta * jnp.dot(B.T, y, precision="highest") + z
+    w = alpha * jnp.dot(B, x, precision="highest")
+    return B, x, w
+
+
+def softmax_xent(logits, labels):
+    """Mean token cross-entropy; logits (T, V) f32-accumulated, labels (T,)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                             labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+def decode_attention(q, k, v, scale: float | None = None):
+    """Single-token GQA decode attention.
+
+    q: (B, Hq, d) ; k, v: (B, S, Hkv, d) ; returns (B, Hq, d).
+    Hq must be a multiple of Hkv (grouped sharing).
+    """
+    B, Hq, d = q.shape
+    _, S, Hkv, _ = k.shape
+    groups = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qg = q.reshape(B, Hkv, groups, d).astype(jnp.float32)
+    kk = k.astype(jnp.float32)
+    vv = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, kk) * scale
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", w, vv)
+    return o.reshape(B, Hq, d).astype(q.dtype)

@@ -1,0 +1,4 @@
+"""repro.launch — mesh, dry-run, training and serving launchers.
+
+NOTE: do not import ``dryrun`` from library code — it sets XLA_FLAGS for
+512 placeholder devices at import time (by design, per assignment)."""

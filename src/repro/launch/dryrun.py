@@ -1,0 +1,172 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on
+512 placeholder host devices and record memory / cost / collective
+analysis.  This is the proof that the distribution config is coherent
+without real hardware (see the assignment's MULTI-POD DRY-RUN block).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Results are cached as JSON under experiments/dryrun/ and summarized in
+EXPERIMENTS.md §Dry-run.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs import ARCHS, SHAPES, get_config, supported_cells
+from repro.dist import sharding
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.optim import AdamWHyper, abstract_opt_state
+from repro.train import steps
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               mesh=None, extra_tag: str = ""):
+    """Lower + compile one cell; returns (compiled, info dict)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    from repro.models.common import set_tensor_parallel
+    # fsdp_only is a TRAIN-only policy: prefill's global batch (32) is
+    # smaller than the chip count, so pure-DP starves (P8, refuted);
+    # decode keeps TP for KV-cache sharding (P2)
+    set_tensor_parallel(not (cfg.fsdp_only and shape.kind == "train"))
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    abstract_ps = models.abstract_params(cfg)
+    serving = shape.kind != "train"        # P2: TP-only params for serving
+    pspecs = sharding.param_pspecs(cfg, abstract_ps, mesh, serving=serving)
+    t0 = time.time()
+
+    with jax.sharding.set_mesh(mesh):
+        if shape.kind == "train":
+            hyper = AdamWHyper()
+            step_fn = steps.make_train_step(cfg, hyper)
+            opt_abs = abstract_opt_state(cfg, abstract_ps)
+            ospecs = sharding.opt_pspecs(cfg, opt_abs, mesh, abstract_ps)
+            batch_abs = steps.abstract_batch(cfg, shape)
+            bspecs = sharding.batch_pspecs(cfg, batch_abs, mesh)
+            cd = jnp.dtype(cfg.compute_dtype)
+            abstract_pc = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, cd), abstract_ps)
+            state_abs = {"params": abstract_ps, "params_c": abstract_pc,
+                         "opt": opt_abs}
+            state_specs = {"params": pspecs, "params_c": pspecs,
+                           "opt": ospecs}
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_specs, bspecs),
+                out_shardings=(state_specs, None),
+                donate_argnums=(0,),
+            ).lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            step_fn = steps.make_prefill_step(cfg)
+            batch_abs = steps.abstract_batch(cfg, shape)
+            batch_abs.pop("labels")
+            bspecs = sharding.batch_pspecs(cfg, batch_abs, mesh)
+            cache_abs = models.abstract_cache(cfg, shape.global_batch,
+                                              shape.seq_len)
+            cspecs = sharding.cache_pspecs(cfg, cache_abs, mesh)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(pspecs, bspecs),
+                out_shardings=(None, cspecs),
+            ).lower(abstract_ps, batch_abs)
+        else:  # decode
+            step_fn = steps.make_decode_step(cfg)
+            dec = steps.abstract_decode_inputs(cfg, shape)
+            cspecs = sharding.cache_pspecs(cfg, dec["cache"], mesh)
+            rep = NamedSharding(mesh, P())
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(pspecs, cspecs, rep, rep),
+                out_shardings=(rep, None, cspecs),
+                donate_argnums=(1,),
+            ).lower(abstract_ps, dec["cache"], dec["tokens"], dec["pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    n_layers = cfg.n_layers + cfg.encoder_layers
+    info = analysis.analyze(lowered, compiled, body_multiplier=n_layers)
+    info["meta"] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": dict(mesh.shape), "multi_pod": multi_pod,
+        "kind": shape.kind,
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "params": cfg.params_count(), "active_params": cfg.active_params_count(),
+    }
+    return compiled, info
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir: pathlib.Path, force=False):
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    path = out_dir / f"{tag}.json"
+    if path.exists() and not force:
+        print(f"[skip cached] {tag}")
+        return True
+    print(f"[dryrun] {tag} ...", flush=True)
+    try:
+        compiled, info = lower_cell(arch, shape_name, multi_pod=multi_pod)
+        mem = info["memory"]
+        cost = info["cost"]
+        print(f"  memory: {json.dumps(mem)[:300]}")
+        print(f"  cost: {json.dumps(cost)[:300]}")
+        print(f"  collectives: {json.dumps(info['collectives']['by_kind'])}")
+        info["ok"] = True
+    except Exception as e:
+        info = {"ok": False, "error": traceback.format_exc(),
+                "meta": {"arch": arch, "shape": shape_name,
+                         "multi_pod": multi_pod}}
+        print(f"  FAILED: {e}")
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(info, indent=1))
+    return info.get("ok", False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+
+    cells: list[tuple[str, str, bool]] = []
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    for arch in archs:
+        shapes = supported_cells(arch) if (args.all or not args.shape) \
+            else [args.shape]
+        for s in shapes:
+            if args.both_meshes:
+                cells.append((arch, s, False))
+                cells.append((arch, s, True))
+            else:
+                cells.append((arch, s, args.multi_pod))
+
+    ok = 0
+    for arch, s, mp in cells:
+        ok += bool(run_cell(arch, s, mp, out_dir, force=args.force))
+    print(f"\n{ok}/{len(cells)} cells passed")
+    return 0 if ok == len(cells) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,86 @@
+"""Serving launcher: batched prefill + decode loop with continuous
+token generation (greedy), KV cache managed on-mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke \
+        --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs import get_config, smoke_config
+from repro.dist import sharding
+from repro.launch.mesh import make_host_mesh
+from repro.train import steps as steps_lib
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh(args.model_parallel)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    total = P + G
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab, (B, P)).astype(np.int32)
+
+    with jax.sharding.set_mesh(mesh):
+        params = models.init_params(cfg, jax.random.PRNGKey(args.seed))
+        extra = {}
+        if cfg.family == "vlm":
+            extra["patches"] = jnp.asarray(rng.standard_normal(
+                (B, cfg.n_patches, cfg.d_model)), jnp.float32)
+        if cfg.family == "encdec":
+            extra["frames"] = jnp.asarray(rng.standard_normal(
+                (B, cfg.encoder_frames, cfg.d_model)), jnp.float32)
+
+        t0 = time.perf_counter()
+        logits, cache = models.prefill(cfg, params, jnp.asarray(prompts),
+                                       **extra)
+        # grow the cache to the full generation horizon
+        def grow(a):
+            if a.ndim >= 3 and a.shape[2] == P and cfg.family != "hybrid":
+                pad = [(0, 0)] * a.ndim
+                pad[2] = (0, total - P)
+                return jnp.pad(a, pad)
+            return a
+        cache = jax.tree_util.tree_map(grow, cache)
+        t_prefill = time.perf_counter() - t0
+
+        decode = jax.jit(steps_lib.make_decode_step(cfg),
+                         donate_argnums=(1,))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out_tokens = [tok]
+        t0 = time.perf_counter()
+        for i in range(G - 1):
+            tok, logits, cache = decode(params, cache, tok,
+                                        jnp.int32(P + i))
+            out_tokens.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t0
+
+    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+    tput = B * (G - 1) / max(t_decode, 1e-9)
+    print(f"prefill {P} toks x{B}: {t_prefill*1e3:.1f} ms")
+    print(f"decode  {G-1} steps x{B}: {t_decode*1e3:.1f} ms "
+          f"({tput:.1f} tok/s)")
+    print("sample generation (first sequence):", gen[0][:16].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

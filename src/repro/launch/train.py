@@ -1,0 +1,137 @@
+"""Training launcher — the end-to-end driver.
+
+Production shape: sharded state on the production mesh, synthetic data
+pipeline, async checkpointing, preemption guard, straggler watchdog,
+exact resume.  On this CPU container it runs real (small) models on the
+host mesh; on a pod, the same flags target the 16×16 / 2×16×16 meshes.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3_8b --smoke \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ck --resume
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.ckpt import (AsyncCheckpointer, PreemptionGuard, StepWatchdog,
+                        latest_step, restore)
+from repro.configs import SHAPES, ShapeConfig, get_config, smoke_config
+from repro.data import make_batch_fn, shard_batch
+from repro.dist import sharding
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim import AdamWHyper, init_opt_state
+from repro.train import steps as steps_lib
+
+
+def build_state(cfg, seed: int):
+    params = models.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = init_opt_state(cfg, params)
+    cd = jnp.dtype(cfg.compute_dtype)
+    params_c = jax.tree_util.tree_map(
+        lambda x: x.astype(cd)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+    return {"params": params, "params_c": params_c, "opt": opt}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", choices=["host", "pod", "multipod"],
+                    default="host")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    hyper = AdamWHyper(lr=args.lr, warmup_steps=max(1, args.steps // 20),
+                       total_steps=args.steps)
+
+    mesh = {"host": lambda: make_host_mesh(args.model_parallel),
+            "pod": lambda: make_production_mesh(),
+            "multipod": lambda: make_production_mesh(multi_pod=True)
+            }[args.mesh]()
+    print(f"mesh: {dict(mesh.shape)}  devices={mesh.devices.size}")
+
+    train_step = steps_lib.make_train_step(cfg, hyper, accum=args.accum)
+    get_batch = make_batch_fn(cfg, shape)
+
+    with jax.sharding.set_mesh(mesh):
+        abstract_ps = models.abstract_params(cfg)
+        pspecs = sharding.param_pspecs(cfg, abstract_ps, mesh)
+        state = build_state(cfg, args.seed)
+        from repro.optim import abstract_opt_state
+        ospecs = sharding.opt_pspecs(
+            cfg, abstract_opt_state(cfg, abstract_ps), mesh, abstract_ps)
+        state_specs = {"params": pspecs, "params_c": pspecs, "opt": ospecs}
+        state = jax.device_put(state, state_specs)
+
+        start = 0
+        if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+            state, start, extra = restore(args.ckpt_dir, state,
+                                          shardings=state_specs)
+            print(f"resumed from step {start}")
+
+        batch_abs = steps_lib.abstract_batch(cfg, shape)
+        bspecs = sharding.batch_pspecs(cfg, batch_abs, mesh)
+        step_jit = jax.jit(train_step, in_shardings=(state_specs, bspecs),
+                           out_shardings=(state_specs, None),
+                           donate_argnums=(0,))
+
+        ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+        watchdog = StepWatchdog()
+        history = []
+        with PreemptionGuard() as guard:
+            for step in range(start, args.steps):
+                t0 = time.perf_counter()
+                batch = shard_batch(get_batch(step), bspecs)
+                state, metrics = step_jit(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                flagged = watchdog.record(step, dt)
+                if step % args.log_every == 0 or step == args.steps - 1:
+                    print(f"step {step:5d} loss {loss:.4f} "
+                          f"lr {float(metrics['lr']):.2e} "
+                          f"gnorm {float(metrics['grad_norm']):.3f} "
+                          f"{dt*1e3:.0f}ms"
+                          + (" [straggler]" if flagged else ""))
+                history.append({"step": step, "loss": loss, "dt": dt})
+                if ckpt and (step + 1) % args.ckpt_every == 0:
+                    ckpt.save(step + 1, state, {"arch": cfg.name})
+                if guard.requested:
+                    print("preemption requested: checkpointing + exit")
+                    if ckpt:
+                        ckpt.save(step + 1, state, {"arch": cfg.name})
+                    break
+        if ckpt:
+            ckpt.close()
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f)
+    first = np.mean([h["loss"] for h in history[:5]]) if history else float("nan")
+    last = np.mean([h["loss"] for h in history[-5:]]) if history else float("nan")
+    print(f"loss {first:.4f} -> {last:.4f} over {len(history)} steps")
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro.models — the 10-architecture model zoo (pure functional JAX)."""
+from .forward import (abstract_cache, decode_step, forward_lm, lm_loss,
+                      prefill, zero_cache)
+from .model import abstract_params, init_params, model_shapes
+
+__all__ = ["abstract_cache", "abstract_params", "decode_step", "forward_lm",
+           "init_params", "lm_loss", "model_shapes", "prefill", "zero_cache"]

@@ -1,0 +1,337 @@
+"""Shared model layers: norms, rope, flash attention, MLP, MoE.
+
+Everything is pure-functional JAX over explicit param pytrees.  Layers
+apply ``constrain`` sharding hints so GSPMD places TP/SP/EP collectives
+where the runtime design wants them (DESIGN.md §3.2).
+
+Logical mesh axes:
+  dp  — data parallel (maps to ('pod','data') or ('data',))
+  tp  — tensor parallel (maps to ('model',))
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+def _mesh_axes() -> tuple[str, ...]:
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        return tuple(mesh.axis_names) if mesh is not None else ()
+    except Exception:
+        return ()
+
+
+# Topology-aware sharding policy (perf iteration P5): small-d_model archs
+# (whisper: 64-wide shards at tp=16) pay more in TP collectives than they
+# gain in parallel compute; with tp disabled, 'tp' resolves to nothing and
+# 'dp' absorbs the whole mesh (pure FSDP over all 256/512 chips).
+_TP_ENABLED = True
+
+
+def set_tensor_parallel(enabled: bool):
+    global _TP_ENABLED
+    _TP_ENABLED = bool(enabled)
+
+
+def tensor_parallel_enabled() -> bool:
+    return _TP_ENABLED
+
+
+def resolve_axis(logical: str | None, axes: tuple[str, ...]):
+    if logical is None:
+        return None
+    if logical == "dp":
+        pool = ("pod", "data") if _TP_ENABLED else ("pod", "data", "model")
+        got = tuple(a for a in pool if a in axes)
+        return got if got else None
+    if logical == "tp":
+        if not _TP_ENABLED:
+            return None
+        return "model" if "model" in axes else None
+    return logical if logical in axes else None
+
+
+def pspec(*logical: str | None) -> P:
+    axes = _mesh_axes()
+    return P(*[resolve_axis(x, axes) for x in logical])
+
+
+def logical_axis_size(logical: str) -> int:
+    """Product of mesh sizes a logical axis maps to (1 off-mesh)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return 1
+        ax = resolve_axis(logical, tuple(mesh.axis_names))
+        if ax is None:
+            return 1
+        axes = (ax,) if isinstance(ax, str) else ax
+        out = 1
+        for a in axes:
+            out *= dict(mesh.shape)[a]
+        return out
+    except Exception:
+        return 1
+
+
+def constrain(x: jax.Array, *logical: str | None, barrier: bool = False
+              ) -> jax.Array:
+    """with_sharding_constraint that degrades to identity off-mesh.
+
+    ``barrier=True`` adds an optimization_barrier so XLA cannot hoist a
+    consumer-side dtype convert above the resharding collective (P4c:
+    SPMD was converting the SP residual stream to f32 *before* the
+    layer-entry all-gather, doubling its wire bytes)."""
+    axes = _mesh_axes()
+    if not axes:
+        return x
+    spec = P(*[resolve_axis(a, axes) for a in logical])
+    out = jax.lax.with_sharding_constraint(x, spec)
+    if barrier:
+        out = jax.lax.optimization_barrier(out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, gamma, eps: float = 1e-6):
+    """Stats in f32; the (B,S,D)-sized products stay in x.dtype so no
+    f32 residual-stream tensor is materialized (perf iteration P4b —
+    GSPMD was placing the SP→TP all-gathers on the f32 upcast)."""
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    return x * r * gamma.astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return ((x - mu.astype(x.dtype)) * r * gamma.astype(x.dtype)
+            + beta.astype(x.dtype))
+
+
+def apply_norm(cfg, x, p, prefix: str):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p[f"{prefix}_g"], p[f"{prefix}_b"])
+    return rmsnorm(x, p[f"{prefix}_g"])
+
+
+# ---------------------------------------------------------------------------
+# rope
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, dh) rotated pairwise; positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash-style blockwise attention (lax.scan over KV blocks)
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, *, causal: bool, q_offset=0,
+                        window: int = 0, block_kv: int = 1024,
+                        scale: float | None = None):
+    """Online-softmax attention streaming KV in blocks.
+
+    q: (B, Sq, Hq, dh); k, v: (B, Sk, Hkv, dh); Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (prefill: 0; decode: pos).
+    ``window``: if >0, sliding-window attention (sub-quadratic).
+    Never materializes (Sq, Sk) logits — HBM peak is O(Sq·block_kv).
+
+    Layout (perf iteration P1, EXPERIMENTS.md §Perf): queries and the
+    scan carry keep the MERGED Hq head dim and are sharding-constrained
+    over it.  The earlier (Hkv, G) split layout left the carry
+    unshardable (Hkv < mesh tp), so GSPMD replicated it and re-gathered
+    the f32 logits every block — tens of GiB of all-gathers per layer.
+    KV blocks are small and stay head-replicated; the grouped expansion
+    happens per block after the constraint.
+    """
+    B, Sq, Hq, dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else dh ** -0.5
+    bk = min(block_kv, Sk)
+    while Sk % bk:
+        bk //= 2
+    nblocks = Sk // bk
+
+    qh = (q.astype(jnp.float32) * scale)
+    qh = constrain(qh, "dp", None, "tp", None)       # (B,Sq,Hq,dh)
+    kb = jnp.moveaxis(k.reshape(B, nblocks, bk, Hkv, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nblocks, bk, Hkv, dv), 1, 0)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, blk):
+        m, l, acc, bidx = carry
+        kblk, vblk = blk                              # (B,bk,Hkv,d*)
+        if G > 1:                                     # grouped expansion
+            kblk = jnp.repeat(kblk, G, axis=2)
+            vblk = jnp.repeat(vblk, G, axis=2)
+        kblk = constrain(kblk.astype(jnp.float32), "dp", None, "tp", None)
+        vblk = constrain(vblk.astype(jnp.float32), "dp", None, "tp", None)
+        logits = jnp.einsum("bshd,bthd->bsht", qh, kblk)  # (B,Sq,Hq,bk)
+        logits = constrain(logits, "dp", None, "tp", None)
+        k_pos = bidx * bk + jnp.arange(bk)
+        mask = jnp.ones((Sq, bk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        neg = jnp.float32(-1e30)
+        logits = jnp.where(mask[None, :, None, :], logits, neg)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(mask[None, :, None, :], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bsht,bthd->bshd",
+                                                      p, vblk)
+        return (m_new, l_new, acc_new, bidx + 1), None
+
+    m0 = constrain(jnp.full((B, Sq, Hq), -1e30, jnp.float32),
+                   "dp", None, "tp")
+    l0 = constrain(jnp.zeros((B, Sq, Hq), jnp.float32), "dp", None, "tp")
+    a0 = constrain(jnp.zeros((B, Sq, Hq, dv), jnp.float32),
+                   "dp", None, "tp", None)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, 0), (kb, vb))
+    l = jnp.maximum(l, 1e-20)
+    out = acc / l[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp(cfg, x, wg, wu, wd, bias=None):
+    """SwiGLU (wg,wu,wd) or GELU (wu,wd; wg unused)."""
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ wg) * (x @ wu)
+    else:
+        h = jax.nn.gelu(x @ wu)
+    if h.ndim == 3:
+        h = constrain(h, "dp", None, "tp")
+    else:                       # token-major (inside MoE shared expert)
+        h = constrain(h, None, "tp")
+    return h @ wd
+
+
+# ---------------------------------------------------------------------------
+# MoE: sort-based capacity dispatch (flop-proportional to routed tokens)
+# ---------------------------------------------------------------------------
+
+def moe_layer(cfg, x, p):
+    """x: (G, Tg, D) group-batched tokens.  p: router (D,E), wg/wu
+    (E,D,F), wd (E,F,D), optional shared expert wg_s/wu_s/wd_s.
+
+    Dispatch: top-k routing → per-group stable sort by expert →
+    per-expert capacity slots → dense (G, E, C, D) expert batch → einsum
+    → weighted scatter-add.  FLOPs ∝ E·C·D·F with C ≈ Tg·k/E·cap (vs the
+    dense-all-experts formulation's E/k-fold waste).
+
+    Perf iteration P3: group-batched natively (no vmap) so the sharding
+    constraints bind to the real arrays — groups shard over dp, experts
+    over 'model' when E divides it (EP) with F-dim TP as the fallback
+    (grok: E=8 < 16).  The earlier vmap-of-constraints variant left the
+    dispatch buffers replicated: GSPMD emitted ~100 GiB/step of
+    collective-permutes on grok-1 train_4k.
+    """
+    G, Tg, D = x.shape
+    E, k = cfg.n_experts, cfg.topk
+    C = max(8, int(Tg * k / E * cfg.capacity_factor))
+    C = min(C, Tg * k)
+    x = constrain(x, "dp", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)              # (G, Tg, E)
+    gate, idx = jax.lax.top_k(probs, k)                  # (G, Tg, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    A = Tg * k                                            # assignments/group
+    flat_e = idx.reshape(G, A)                            # expert ids
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), k)[None], (G, A))      # token ids
+    flat_g = gate.reshape(G, A)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    sg = jnp.take_along_axis(flat_g, order, axis=-1)
+    # rank within expert = position - first position of that expert
+    counts = jnp.sum(jax.nn.one_hot(se, E, dtype=jnp.int32), axis=1)  # (G,E)
+    starts = jnp.cumsum(counts, axis=-1) - counts
+    rank = jnp.arange(A)[None] - jnp.take_along_axis(starts, se, axis=-1)
+    keep = rank < C                                       # capacity drop
+    slot = se * C + jnp.where(keep, rank, 0)              # (G, A)
+
+    gid = jnp.arange(G)[:, None]
+    gathered = jnp.where(keep[..., None], x[gid, st], 0)
+    # P3.3: scatter stays dp-local (operand constrained BEFORE the
+    # scatter so GSPMD partitions it along G instead of replicating a
+    # full f32 (G,E·C,D) buffer); the EP reshard happens afterwards as
+    # one explicit all-to-all-equivalent on the bf16 buffer.
+    zeros = constrain(jnp.zeros((G, E * C, D), x.dtype), "dp", None, None)
+    xe = zeros.at[gid, slot].add(gathered)
+    xe = constrain(xe, "dp", None, None)
+    xe = xe.reshape(G, E, C, D)
+    tp_size = logical_axis_size("tp")
+    ep = "tp" if (tp_size > 1 and E % tp_size == 0) else None  # EP if divisible
+    xe = constrain(xe, "dp", ep, None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wg"])
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "dp", ep, None, None if ep else "tp")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])         # (G, E, C, D)
+    # no-EP fallback: keep D sharded so the F-contraction partial sums
+    # reduce-scatter instead of all-reduce (P3.2) — halves the wire bytes
+    ye = constrain(ye, "dp", ep, None, None if ep else "tp")
+
+    # combine path: un-EP (a2a back) but keep D sharded in the no-EP
+    # fallback so the gather/scatter stay local in that layout too
+    tp_d = None if ep else "tp"
+    ye = constrain(ye.reshape(G, E * C, D), "dp", None, tp_d)
+    contrib = ye[gid, slot]                               # (G, A, D)
+    contrib = jnp.where(keep[..., None], contrib, 0) \
+        * sg[..., None].astype(x.dtype)
+    out_z = constrain(jnp.zeros((G, Tg, D), x.dtype), "dp", None, tp_d)
+    out = out_z.at[gid, st].add(contrib)
+    out = constrain(out, "dp", None, tp_d)
+
+    if cfg.n_shared_experts:
+        xs = x.reshape(G * Tg, D)
+        out = out + mlp(cfg, xs, p.get("wg_s"), p["wu_s"], p["wd_s"]
+                        ).reshape(G, Tg, D)
+    # auxiliary load-balance loss (Switch-style), returned for logging
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(idx[..., 0], E), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return out, aux

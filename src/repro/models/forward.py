@@ -1,0 +1,401 @@
+"""Model drivers: training forward/loss, prefill, and decode step for
+every family.  These are the functions the launcher jits with shardings
+(train_step/serve_step live in repro.train; they wrap these)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import ssm as ssm_lib
+from .common import apply_norm, constrain, rmsnorm
+from .model import (decode_gqa_attention, decoder_layer, gqa_attention,
+                    mla_decode_attention, new_kv)
+
+
+def _kind(cfg) -> str:
+    return {"dense": "dense", "vlm": "dense", "moe": "moe", "ssm": "ssm",
+            "hybrid": "hybrid", "encdec": "dense"}[cfg.family]
+
+
+def _cast(cfg, params):
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def f(x):
+        return x.astype(cd) if jnp.issubdtype(x.dtype, jnp.floating) else x
+
+    return jax.tree_util.tree_map(f, params)
+
+
+def _ssm_subparams(lp):
+    return {k[4:]: v for k, v in lp.items() if k.startswith("ssm_")}
+
+
+def embed_tokens(cfg, params, tokens):
+    x = params["embed"][tokens]
+    return constrain(x, "dp", None, None)
+
+
+def unembed(cfg, params, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x @ w
+    return constrain(logits, "dp", None, "tp")
+
+
+# ---------------------------------------------------------------------------
+# training / prefill forward
+# ---------------------------------------------------------------------------
+
+def _scan_layers(cfg, x, stacked, kind, *, q_offset=0, collect_cache=False,
+                 enc_out=None):
+    """lax.scan over a stacked layer dict; optionally collects per-layer
+    kv/state caches (prefill)."""
+
+    def body(carry, lp):
+        h, aux_acc = carry
+        if enc_out is not None:
+            h2, cache, aux = _whisper_dec_layer(cfg, h, lp, enc_out,
+                                                q_offset=q_offset)
+        else:
+            h2, cache, aux = decoder_layer(cfg, h, lp, kind=kind,
+                                           q_offset=q_offset)
+        out = cache if collect_cache else ()
+        return (h2, aux_acc + aux), out
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), caches = jax.lax.scan(body_fn, (x, 0.0), stacked)
+    return x, aux, caches
+
+
+def forward_lm(cfg, params, tokens, *, patches=None, frames=None,
+               collect_cache=False, q_offset=0):
+    """Full-sequence forward.  Returns (logits, aux, caches)."""
+    params = _cast(cfg, params)
+    kind = _kind(cfg)
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm" and patches is not None:
+        npat = patches.shape[1]
+        x = jnp.concatenate([patches.astype(x.dtype), x[:, npat:]], axis=1)
+    x = constrain(x, "dp", "tp", None)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = whisper_encode(cfg, params, frames)
+
+    caches = []
+    if cfg.first_dense_layers:
+        x, aux0, c0 = _scan_layers(cfg, x, params["head_layers"], "dense",
+                                   q_offset=q_offset,
+                                   collect_cache=collect_cache)
+        caches.append(c0)
+    else:
+        aux0 = 0.0
+    x, aux, c1 = _scan_layers(cfg, x, params["layers"], kind,
+                              q_offset=q_offset, collect_cache=collect_cache,
+                              enc_out=enc_out)
+    caches.append(c1)
+    x = apply_norm(cfg, x, params, "final")
+    logits = unembed(cfg, params, x)
+    return logits, aux0 + aux, caches
+
+
+def lm_loss(cfg, params, batch):
+    """Mean next-token cross entropy (f32 accumulated)."""
+    logits, aux, _ = forward_lm(
+        cfg, params, batch["tokens"], patches=batch.get("patches"),
+        frames=batch.get("frames"))
+    labels = batch["labels"]
+    lg32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg32, axis=-1)
+    ll = jnp.take_along_axis(lg32, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    xent = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = xent + 0.01 * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# whisper encoder / decoder layers
+# ---------------------------------------------------------------------------
+
+def whisper_encode(cfg, params, frames):
+    """frames: (B, F, D) precomputed conv-frontend embeddings (STUB per
+    assignment).  Bidirectional self-attention encoder."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + params["enc_pos"][None, :x.shape[1]]
+    x = constrain(x, "dp", "tp", None)
+
+    def body(carry, lp):
+        h, _ = carry
+        a = apply_norm(cfg, h, lp, "ln1")
+        a = constrain(a, "dp", None, None)        # SP gather (bf16)
+        o, _ = gqa_attention(cfg, a, lp, causal=False, use_rope=False)
+        h = h + o
+        m = apply_norm(cfg, h, lp, "ln2")
+        from .common import mlp
+        h = h + mlp(cfg, m, lp.get("wg"), lp["wu"], lp["wd"])
+        h = constrain(h, "dp", "tp", None)
+        return (h, 0.0), ()
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, _), _ = jax.lax.scan(body_fn, (x, 0.0), params["enc_layers"])
+    return apply_norm(cfg, x, params, "encf")
+
+
+def _whisper_dec_layer(cfg, x, lp, enc_out, *, q_offset=0):
+    h = apply_norm(cfg, x, lp, "ln1")
+    h = constrain(h, "dp", None, None)            # SP gather (bf16)
+    o, (k, v) = gqa_attention(cfg, h, lp, causal=True, q_offset=q_offset)
+    x = x + o
+    hx = apply_norm(cfg, x, lp, "lnx")
+    hx = constrain(hx, "dp", None, None)
+    xo, (xk, xv) = gqa_attention(cfg, hx, lp, kv_x=enc_out, causal=False,
+                                 use_rope=False, prefix="x_")
+    x = x + xo
+    h2 = apply_norm(cfg, x, lp, "ln2")
+    h2 = constrain(h2, "dp", None, None)
+    from .common import mlp
+    x = x + mlp(cfg, h2, lp.get("wg"), lp["wu"], lp["wd"])
+    x = constrain(x, "dp", "tp", None)
+    return x, (k, v, xk, xv), 0.0
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def abstract_cache(cfg, batch: int, seq: int) -> dict:
+    """ShapeDtypeStruct cache tree for decode at KV length ``seq``."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    L = cfg.n_layers
+    dh, Hkv = cfg.dh, cfg.n_kv_heads
+    fam = cfg.family
+    c: dict[str, Any] = {}
+    if fam in ("dense", "vlm"):
+        c["k"] = jax.ShapeDtypeStruct((L, batch, seq, Hkv, dh), cd)
+        c["v"] = jax.ShapeDtypeStruct((L, batch, seq, Hkv, dh), cd)
+    elif fam == "moe" and cfg.kv_lora_rank:
+        c["ckv"] = jax.ShapeDtypeStruct((L, batch, seq, cfg.kv_lora_rank), cd)
+        c["kr"] = jax.ShapeDtypeStruct((L, batch, seq, cfg.qk_rope_dim), cd)
+    elif fam == "moe":
+        c["k"] = jax.ShapeDtypeStruct((L, batch, seq, Hkv, dh), cd)
+        c["v"] = jax.ShapeDtypeStruct((L, batch, seq, Hkv, dh), cd)
+    elif fam == "ssm":
+        c["state"] = jax.ShapeDtypeStruct(
+            (L, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32)
+    elif fam == "hybrid":
+        W = cfg.window
+        c["k"] = jax.ShapeDtypeStruct((L, batch, W, Hkv, dh), cd)
+        c["v"] = jax.ShapeDtypeStruct((L, batch, W, Hkv, dh), cd)
+        c["state"] = jax.ShapeDtypeStruct(
+            (L, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32)
+    elif fam == "encdec":
+        c["k"] = jax.ShapeDtypeStruct((L, batch, seq, Hkv, dh), cd)
+        c["v"] = jax.ShapeDtypeStruct((L, batch, seq, Hkv, dh), cd)
+        c["xk"] = jax.ShapeDtypeStruct(
+            (L, batch, cfg.encoder_frames, Hkv, dh), cd)
+        c["xv"] = jax.ShapeDtypeStruct(
+            (L, batch, cfg.encoder_frames, Hkv, dh), cd)
+    return c
+
+
+def zero_cache(cfg, batch: int, seq: int) -> dict:
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  abstract_cache(cfg, batch, seq))
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def cache_pspec_rules(cfg):
+    """Logical sharding for each cache leaf (dp over batch; heads on tp
+    when divisible; sequence dim sharded on tp for batch-1 long ctx)."""
+    rules = {}
+    fam = cfg.family
+    head_tp = "tp" if cfg.n_kv_heads % 8 == 0 else None
+    for name in ("k", "v", "xk", "xv"):
+        rules[name] = (None, "dp", "tp" if fam == "ssm" else None, head_tp, None)
+        rules[name] = (None, "dp", None, head_tp, None)
+    rules["ckv"] = (None, "dp", None, None)
+    rules["kr"] = (None, "dp", None, None)
+    rules["state"] = (None, "dp", "tp", None, None)
+    return rules
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    """One token for every sequence in the batch.
+
+    tokens: (B,) int32 (the tokens generated at ``pos-1``… i.e. current
+    inputs); pos: scalar int32 position being generated.
+    Returns (logits (B, V), new cache).
+    """
+    params = _cast(cfg, params)
+    kind = _kind(cfg)
+    B = tokens.shape[0]
+    x = embed_tokens(cfg, params, tokens[:, None])          # (B,1,D)
+    fam = cfg.family
+
+    def attn_dense(h, lp, ck, cv, l, window=0, prefix="", use_rope=True,
+                   ring=False):
+        k, v = new_kv(cfg, h, lp, pos, prefix=prefix, use_rope=use_rope)
+        S = ck.shape[2]
+        slot = (pos % S) if ring else pos
+        ck = jax.lax.dynamic_update_slice(
+            ck, k[None].astype(ck.dtype), (l, 0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cv, v[None].astype(cv.dtype), (l, 0, slot, 0, 0))
+        ck_l = jax.lax.dynamic_index_in_dim(ck, l, 0, keepdims=False)
+        cv_l = jax.lax.dynamic_index_in_dim(cv, l, 0, keepdims=False)
+        if ring:
+            slots = jnp.arange(S)
+            k_positions = pos - ((pos - slots) % S)
+            o = _ring_attention(cfg, h, lp, ck_l, cv_l, k_positions, pos)
+        else:
+            o = decode_gqa_attention(cfg, h, lp, ck_l, cv_l, pos,
+                                     window=window, prefix=prefix,
+                                     use_rope=use_rope)
+        return o, ck, cv
+
+    def body(carry, lp, *, stack_kind):
+        x, cache, l = carry
+        h = apply_norm(cfg, x, lp, "ln1")
+        if kind == "ssm":
+            st_l = jax.lax.dynamic_index_in_dim(cache["state"], l, 0, False)
+            o, st = ssm_lib.ssm_mixer(cfg, h, _ssm_subparams(lp), state=st_l)
+            cache["state"] = jax.lax.dynamic_update_slice(
+                cache["state"], st[None].astype(cache["state"].dtype),
+                (l, 0, 0, 0, 0))
+            x = x + o
+        elif kind == "hybrid":
+            ao, cache["k"], cache["v"] = attn_dense(
+                h, lp, cache["k"], cache["v"], l, ring=True)
+            st_l = jax.lax.dynamic_index_in_dim(cache["state"], l, 0, False)
+            so, st = ssm_lib.ssm_mixer(cfg, h, _ssm_subparams(lp), state=st_l)
+            cache["state"] = jax.lax.dynamic_update_slice(
+                cache["state"], st[None].astype(cache["state"].dtype),
+                (l, 0, 0, 0, 0))
+            o = 0.5 * (rmsnorm(ao, lp["mix_attn_g"])
+                       + rmsnorm(so, lp["mix_ssm_g"]))
+            x = x + o
+        elif cfg.kv_lora_rank:
+            ckv_new = h @ lp["w_dkv"]
+            kr_new = h @ lp["w_kr"]
+            from .common import rope as _rope
+            kr_new = _rope(kr_new[..., None, :], jnp.full((B, 1), pos),
+                           cfg.rope_theta)[..., 0, :]
+            cache["ckv"] = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv_new[None].astype(cache["ckv"].dtype),
+                (l, 0, pos, 0))
+            cache["kr"] = jax.lax.dynamic_update_slice(
+                cache["kr"], kr_new[None].astype(cache["kr"].dtype),
+                (l, 0, pos, 0))
+            ckv_l = jax.lax.dynamic_index_in_dim(cache["ckv"], l, 0, False)
+            kr_l = jax.lax.dynamic_index_in_dim(cache["kr"], l, 0, False)
+            o = mla_decode_attention(cfg, h, lp, ckv_l, kr_l, pos)
+            x = x + o
+        else:
+            o, cache["k"], cache["v"] = attn_dense(
+                h, lp, cache["k"], cache["v"], l, window=cfg.window)
+            x = x + o
+            if fam == "encdec":
+                hx = apply_norm(cfg, x, lp, "lnx")
+                xk_l = jax.lax.dynamic_index_in_dim(cache["xk"], l, 0, False)
+                xv_l = jax.lax.dynamic_index_in_dim(cache["xv"], l, 0, False)
+                xo = decode_gqa_attention(
+                    cfg, hx, lp, xk_l, xv_l, pos, prefix="x_", use_rope=False,
+                    kv_valid_len=xk_l.shape[1] - 1)
+                x = x + xo
+
+        if kind != "ssm":
+            h2 = apply_norm(cfg, x, lp, "ln2")
+            from .model import _moe_or_mlp
+            m, _ = _moe_or_mlp(cfg, h2, lp, stack_kind == "moe")
+            x = x + m
+        return (x, cache, l + 1), ()
+
+    stacks = []
+    if cfg.first_dense_layers:
+        stacks.append(("dense", params["head_layers"]))
+    stacks.append((kind, params["layers"]))
+    l0 = jnp.int32(0)
+    carry = (x, cache, l0)
+    for stack_kind, stacked in stacks:
+        carry, _ = jax.lax.scan(
+            functools.partial(body, stack_kind=stack_kind), carry, stacked)
+    x, cache, _ = carry
+    x = apply_norm(cfg, x, params, "final")
+    logits = unembed(cfg, params, x)[:, 0]
+    return logits, cache
+
+
+def _ring_attention(cfg, h, lp, ck_l, cv_l, k_positions, pos):
+    """Sliding-window decode attention over a ring cache (hybrid)."""
+    import jax.numpy as jnp
+    from .model import _split_heads
+    from .common import rope as _rope
+    B = h.shape[0]
+    dh, Hq, Hkv = cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    q = _split_heads(h @ lp["wq"], Hq, dh)
+    q = _rope(q, jnp.full((B, 1), pos), cfg.rope_theta)
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bthd->bhgt", qg,
+                        ck_l.astype(jnp.float32)) * dh ** -0.5
+    mask = (k_positions >= 0) & (k_positions <= pos)
+    scores = jnp.where(mask[None, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", w, cv_l.astype(jnp.float32))
+    o = o.reshape(B, 1, Hq * dh).astype(h.dtype) @ lp["wo"]
+    return o
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(cfg, params, tokens, *, patches=None, frames=None):
+    """Full-sequence forward that also builds the decode cache.
+    Returns (last-token logits, cache)."""
+    logits, _, caches = forward_lm(cfg, params, tokens, patches=patches,
+                                   frames=frames, collect_cache=True)
+    fam, kind = cfg.family, _kind(cfg)
+    cache: dict[str, Any] = {}
+    main = caches[-1]
+    if cfg.first_dense_layers:
+        head = caches[0]
+        main = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), head, main)
+    if kind in ("dense",) and fam != "encdec":
+        cache["k"], cache["v"] = main[0], main[1]
+    elif fam == "encdec":
+        cache["k"], cache["v"], cache["xk"], cache["xv"] = main
+    elif fam == "moe" and cfg.kv_lora_rank:
+        cache["ckv"], cache["kr"] = main
+    elif fam == "moe":
+        cache["k"], cache["v"] = main[0], main[1]
+    elif fam == "ssm":
+        cache["state"] = main[0]
+    elif fam == "hybrid":
+        k_full, v_full, st = main
+        W = cfg.window
+        S = k_full.shape[2]
+        if S >= W:
+            # last W positions land in ring slots (S-W+i) % W == roll
+            kw = k_full[:, :, S - W:]
+            vw = v_full[:, :, S - W:]
+            shift = (S - W) % W
+            cache["k"] = jnp.roll(kw, shift=shift, axis=2)
+            cache["v"] = jnp.roll(vw, shift=shift, axis=2)
+        else:
+            # position i sits at slot i; tail slots masked by k_positions
+            pad = [(0, 0)] * k_full.ndim
+            pad[2] = (0, W - S)
+            cache["k"] = jnp.pad(k_full, pad)
+            cache["v"] = jnp.pad(v_full, pad)
+        cache["state"] = st
+    return logits[:, -1], cache

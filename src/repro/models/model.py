@@ -1,0 +1,355 @@
+"""The model zoo: one generic implementation per family, driven by
+``ModelConfig`` — dense/GQA, MLA+MoE, SSD, hybrid, enc-dec, VLM.
+
+Layer stacks are ``lax.scan``-ned over stacked params (compile-time O(1)
+in depth) with ``jax.checkpoint`` remat.  Functions are pure; params are
+plain nested dicts so the whole tree shards with ``NamedSharding`` and
+dry-runs with ``ShapeDtypeStruct`` leaves.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ssm as ssm_lib
+from .common import (apply_norm, blockwise_attention, constrain, mlp,
+                     moe_layer, rmsnorm, rope)
+
+# ---------------------------------------------------------------------------
+# parameter shape trees
+# ---------------------------------------------------------------------------
+
+def _attn_shapes(cfg, cross: bool = False):
+    D, dh, Hq, Hkv = cfg.d_model, cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    if cfg.kv_lora_rank and not cross:              # MLA
+        qd = Hq * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+        return {
+            "wq": (D, qd),
+            "w_dkv": (D, cfg.kv_lora_rank),
+            "w_kr": (D, cfg.qk_rope_dim),
+            "w_uk": (cfg.kv_lora_rank, Hq * cfg.qk_nope_dim),
+            "w_uv": (cfg.kv_lora_rank, Hq * cfg.v_head_dim),
+            "wo": (Hq * cfg.v_head_dim, D),
+        }
+    s = {"wq": (D, Hq * dh), "wk": (D, Hkv * dh), "wv": (D, Hkv * dh),
+         "wo": (Hq * dh, D)}
+    if cfg.qkv_bias:
+        s |= {"bq": (Hq * dh,), "bk": (Hkv * dh,), "bv": (Hkv * dh,)}
+    return s
+
+
+def _mlp_shapes(cfg, ff):
+    D = cfg.d_model
+    if cfg.act == "swiglu":
+        return {"wg": (D, ff), "wu": (D, ff), "wd": (ff, D)}
+    return {"wu": (D, ff), "wd": (ff, D)}
+
+
+def _norm_shapes(cfg, prefix):
+    if cfg.norm == "layernorm":
+        return {f"{prefix}_g": (cfg.d_model,), f"{prefix}_b": (cfg.d_model,)}
+    return {f"{prefix}_g": (cfg.d_model,)}
+
+
+def _moe_shapes(cfg):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_ff_moe
+    s = {"router": (D, E), "wg": (E, D, F), "wu": (E, D, F), "wd": (E, F, D)}
+    if cfg.n_shared_experts:
+        fs = F * cfg.n_shared_experts
+        s |= {"wg_s": (D, fs), "wu_s": (D, fs), "wd_s": (fs, D)}
+    return s
+
+
+def layer_shapes(cfg, kind: str):
+    """kind: dense | moe | ssm | hybrid | enc | dec(whisper decoder)."""
+    s: dict[str, tuple] = {}
+    s |= _norm_shapes(cfg, "ln1")
+    if kind == "ssm":
+        s |= {f"ssm_{k}": v for k, v in ssm_lib.ssm_param_shapes(cfg).items()}
+        return s
+    s |= _attn_shapes(cfg)
+    if kind == "hybrid":
+        s |= {f"ssm_{k}": v for k, v in ssm_lib.ssm_param_shapes(cfg).items()}
+        s |= {"mix_attn_g": (cfg.d_model,), "mix_ssm_g": (cfg.d_model,)}
+    if kind == "dec":
+        s |= _norm_shapes(cfg, "lnx")
+        s |= {f"x_{k}": v for k, v in _attn_shapes(cfg, cross=True).items()}
+    s |= _norm_shapes(cfg, "ln2")
+    if kind == "moe":
+        s |= _moe_shapes(cfg)
+    else:
+        s |= _mlp_shapes(cfg, cfg.d_ff)
+    return s
+
+
+def model_shapes(cfg) -> dict:
+    V, D = cfg.vocab, cfg.d_model
+    tree: dict[str, Any] = {"embed": (V, D)}
+    if not cfg.tie_embeddings:
+        tree["unembed"] = (D, V)
+    tree |= _norm_shapes(cfg, "final")
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        kind = "dense"
+    elif fam == "moe":
+        kind = "moe"
+    elif fam == "ssm":
+        kind = "ssm"
+    elif fam == "hybrid":
+        kind = "hybrid"
+    elif fam == "encdec":
+        kind = "dec"
+    else:
+        raise ValueError(fam)
+
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    tree["layers"] = {k: (n_scan,) + v
+                      for k, v in layer_shapes(cfg, kind).items()}
+    if cfg.first_dense_layers:
+        dense_cfg = cfg
+        tree["head_layers"] = {
+            k: (cfg.first_dense_layers,) + v
+            for k, v in layer_shapes(dense_cfg, "dense").items()}
+    if fam == "encdec":
+        tree["enc_layers"] = {k: (cfg.encoder_layers,) + v
+                              for k, v in layer_shapes(cfg, "enc").items()}
+        tree["enc_pos"] = (cfg.encoder_frames, D)
+        tree |= {f"encf_{k[6:]}": v
+                 for k, v in _norm_shapes(cfg, "final").items()}
+    return tree
+
+
+def init_params(cfg, key) -> dict:
+    shapes = model_shapes(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    leaves, treedef = jax.tree_util.tree_flatten(shapes,
+                                                 is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+
+    flat_paths = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))[0]
+
+    out = []
+    for (path, shape), k in zip(flat_paths, keys):
+        name = path[-1].key
+        if name.endswith("_g") or name == "ssm_D_skip":
+            out.append(jnp.ones(shape, dtype))
+        elif name.endswith("_b") or name.startswith("b") or name == "ssm_dt_bias":
+            out.append(jnp.zeros(shape, dtype))
+        elif name == "ssm_A_log":
+            out.append(jnp.zeros(shape, dtype))
+        else:
+            scale = 0.02
+            out.append(scale * jax.random.normal(k, shape, dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(cfg) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s, dtype),
+        model_shapes(cfg), is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# attention (shared by all attention-bearing families)
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n, dh):
+    return x.reshape(*x.shape[:-1], n, dh)
+
+
+def gqa_attention(cfg, x, p, *, kv_x=None, causal=True, q_offset=0,
+                  window=0, positions=None, use_rope=True, prefix=""):
+    """Standard (G)QA attention; returns (out, (k, v)) for cache capture."""
+    B, S, D = x.shape
+    dh, Hq, Hkv = cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    kv_x = x if kv_x is None else kv_x
+    g = lambda n: p[prefix + n]
+    q = x @ g("wq")
+    k = kv_x @ g("wk")
+    v = kv_x @ g("wv")
+    if cfg.qkv_bias and prefix == "":
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = _split_heads(q, Hq, dh)
+    k = _split_heads(k, Hkv, dh)
+    v = _split_heads(v, Hkv, dh)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp" if Hkv % 8 == 0 else None, None)
+    v = constrain(v, "dp", None, "tp" if Hkv % 8 == 0 else None, None)
+    if use_rope:
+        if positions is None:
+            positions = q_offset + jnp.arange(S)[None, :]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    o = blockwise_attention(q, k, v, causal=causal, q_offset=q_offset,
+                            window=window)
+    o = o.reshape(B, S, Hq * dh) @ g("wo")
+    return o, (k, v)
+
+
+def mla_attention(cfg, x, p, *, q_offset=0):
+    """DeepSeek MLA (training/prefill expanded form).
+
+    Caches the low-rank latent (c_kv, k_rope) — the MLA memory win."""
+    B, S, D = x.shape
+    Hq = cfg.n_heads
+    nd, rd, vd, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    q = _split_heads(x @ p["wq"], Hq, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    c_kv = x @ p["w_dkv"]                                   # (B,S,r)
+    k_rope = x @ p["w_kr"]                                  # (B,S,rd)
+    k_nope = _split_heads(c_kv @ p["w_uk"], Hq, nd)
+    v = _split_heads(c_kv @ p["w_uv"], Hq, vd)
+    positions = q_offset + jnp.arange(S)[None, :]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    k_rope_r = rope(k_rope[..., None, :], positions, cfg.rope_theta)
+    k_rope_b = jnp.broadcast_to(k_rope_r, (B, S, Hq, rd))
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    kf = jnp.concatenate([k_nope, k_rope_b], -1)
+    scale = (nd + rd) ** -0.5
+    o = blockwise_attention(qf, kf, v, causal=True, q_offset=q_offset,
+                            scale=scale)
+    o = o.reshape(B, S, Hq * vd) @ p["wo"]
+    return o, (c_kv, k_rope)
+
+
+def mla_decode_attention(cfg, x, p, cache_ckv, cache_kr, pos):
+    """Absorbed-matrix MLA decode: scores/values in latent space."""
+    B, S1, D = x.shape                                     # S1 == 1
+    Hq = cfg.n_heads
+    nd, rd, vd, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    q = _split_heads(x @ p["wq"], Hq, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    pos_arr = jnp.full((B, 1), pos)
+    q_rope = rope(q_rope, pos_arr, cfg.rope_theta)
+    # absorb w_uk into the query:  q' = q_nope @ w_uk^T  -> latent space
+    w_uk = p["w_uk"].reshape(r, Hq, nd)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)      # (B,1,Hq,r)
+    # scores against latent cache + rope part
+    S = cache_ckv.shape[1]
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                         cache_ckv.astype(jnp.float32))
+              + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                           cache_kr.astype(jnp.float32)))
+    scores = scores * ((nd + rd) ** -0.5)
+    k_pos = jnp.arange(S)
+    mask = k_pos[None, None, None, :] <= pos
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)                     # (B,Hq,1,S)
+    o_lat = jnp.einsum("bhst,btr->bshr", w, cache_ckv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(r, Hq, vd)
+    o = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(B, 1, Hq * vd).astype(x.dtype) @ p["wo"]
+    return o
+
+
+def decode_gqa_attention(cfg, x, p, cache_k, cache_v, pos, *, window=0,
+                         prefix="", use_rope=True, kv_valid_len=None):
+    """Single-token attention against a (B,S,Hkv,dh) cache (already
+    containing this step's k/v at ``pos``)."""
+    B, S1, D = x.shape
+    dh, Hq, Hkv = cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    q = _split_heads(x @ p[prefix + "wq"], Hq, dh)
+    if cfg.qkv_bias and prefix == "":
+        q = q + p["bq"].reshape(1, 1, Hq, dh)
+    if use_rope:
+        q = rope(q, jnp.full((B, 1), pos), cfg.rope_theta)
+    G = Hq // Hkv
+    S = cache_k.shape[1]
+    qg = q.reshape(B, Hkv, G, dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bthd->bhgt", qg,
+                        cache_k.astype(jnp.float32)) * dh ** -0.5
+    k_pos = jnp.arange(S)
+    limit = pos if kv_valid_len is None else kv_valid_len
+    mask = k_pos[None, None, None, :] <= limit
+    if window:
+        mask &= k_pos[None, None, None, :] > limit - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", w, cache_v.astype(jnp.float32))
+    o = o.reshape(B, 1, Hq * dh).astype(x.dtype) @ p[prefix + "wo"]
+    return o
+
+
+def new_kv(cfg, x, p, pos, *, prefix="", use_rope=True):
+    """Project this step's k/v (decode)."""
+    B = x.shape[0]
+    dh, Hkv = cfg.dh, cfg.n_kv_heads
+    k = _split_heads(x @ p[prefix + "wk"], Hkv, dh)
+    v = _split_heads(x @ p[prefix + "wv"], Hkv, dh)
+    if cfg.qkv_bias and prefix == "":
+        k = k + p["bk"].reshape(1, 1, Hkv, dh)
+        v = v + p["bv"].reshape(1, 1, Hkv, dh)
+    if use_rope:
+        k = rope(k, jnp.full((B, 1), pos), cfg.rope_theta)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _moe_or_mlp(cfg, x, p, is_moe):
+    B, S, D = x.shape
+    if not is_moe:
+        return mlp(cfg, x, p.get("wg"), p["wu"], p["wd"]), 0.0
+    T = B * S
+    groups = 16 if T % 16 == 0 and T >= 16 else 1
+    xg = x.reshape(groups, T // groups, D)
+    if cfg.moe_impl == "shard_map":
+        from repro.dist import moe_ep
+        if moe_ep.supported(cfg):
+            yg, aux = moe_ep.moe_layer_ep(cfg, xg, p)
+            return yg.reshape(B, S, D), aux
+    yg, aux = moe_layer(cfg, xg, p)
+    return yg.reshape(B, S, D), aux
+
+
+def decoder_layer(cfg, x, lp, *, kind: str, q_offset=0):
+    """One decoder layer forward (train/prefill).  Returns
+    (x', cache_pieces) where cache pieces depend on family.
+
+    Sequence parallelism: the residual stream stays S-sharded end to end
+    (the remat-saved carry is 1/tp-sized — gathering x at layer entry was
+    measured to triple temp memory, P4b); the SP→TP boundary sits on the
+    bf16 post-norm h."""
+    h = apply_norm(cfg, x, lp, "ln1")
+    h = constrain(h, "dp", None, None)            # SP gather (bf16)
+    cache = ()
+    if kind == "ssm":
+        o, state = ssm_lib.ssm_mixer(cfg, h, {k[4:]: v for k, v in lp.items()
+                                              if k.startswith("ssm_")})
+        x = x + o
+        cache = (state,)
+    elif kind == "hybrid":
+        ao, (k, v) = gqa_attention(cfg, h, lp, q_offset=q_offset,
+                                   window=cfg.window)
+        so, state = ssm_lib.ssm_mixer(cfg, h, {k2[4:]: v2 for k2, v2 in lp.items()
+                                               if k2.startswith("ssm_")})
+        o = 0.5 * (rmsnorm(ao, lp["mix_attn_g"]) + rmsnorm(so, lp["mix_ssm_g"]))
+        x = x + o
+        cache = (k, v, state)
+    elif cfg.kv_lora_rank:
+        o, (ckv, kr) = mla_attention(cfg, h, lp, q_offset=q_offset)
+        x = x + o
+        cache = (ckv, kr)
+    else:
+        o, (k, v) = gqa_attention(cfg, h, lp, q_offset=q_offset,
+                                  window=cfg.window)
+        x = x + o
+        cache = (k, v)
+
+    aux = 0.0
+    if kind != "ssm":
+        h2 = apply_norm(cfg, x, lp, "ln2")
+        h2 = constrain(h2, "dp", None, None)      # SP gather (bf16)
+        m, aux = _moe_or_mlp(cfg, h2, lp, kind == "moe")
+        x = x + m
+    x = constrain(x, "dp", "tp", None)            # SP reduce-scatter
+    return x, cache, aux

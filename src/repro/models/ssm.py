@@ -1,0 +1,131 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked train/prefill path
+and O(1)-state decode step.
+
+Implements the SSD algorithm of arXiv:2405.21060 (minimal formulation,
+ngroups=1): within-chunk quadratic term + inter-chunk state recurrence
+(lax.scan over chunks).  The recurrence itself is outside the paper's
+map/reduce fusion algebra (DESIGN.md §4) — the surrounding projections,
+gating and norms are standard fusible map chains.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import constrain, rmsnorm
+
+
+def _segsum(a):
+    """a: (..., l) log-decay per step → (..., l, l) lower-tri cumulative
+    sums  segsum(a)[i, j] = sum_{k=j+1..i} a_k  (−inf above diagonal)."""
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    l = a.shape[-1]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(xdt, a_log, B, C, chunk: int):
+    """Chunked SSD.
+
+    xdt: (b, s, h, p)  inputs pre-multiplied by dt
+    a_log: (b, s, h)   per-step log decay (= -exp(A_log)·dt)
+    B, C: (b, s, n)    input/output projections (shared across heads)
+    Returns y: (b, s, h, p) and final state (b, h, p, n).
+    """
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    c = min(chunk, s)
+    while s % c:
+        c //= 2
+    nc = s // c
+
+    def ch(t):  # (b, s, ...) -> (b, nc, c, ...)
+        return t.reshape(b, nc, c, *t.shape[2:])
+
+    xc, ac, Bc, Cc = ch(xdt), ch(a_log), ch(B), ch(C)
+    ac = ac.astype(jnp.float32)
+    acum = jnp.cumsum(ac, axis=2)                        # (b,nc,c,h)
+
+    # within-chunk (quadratic in c)
+    L = jnp.exp(_segsum(jnp.moveaxis(ac, -1, 2)))        # (b,nc,h,c,c)
+    y_diag = jnp.einsum("bzln,bzsn,bzhls,bzshp->bzlhp",
+                        Cc.astype(jnp.float32), Bc.astype(jnp.float32),
+                        L, xc.astype(jnp.float32))
+
+    # per-chunk summarized states
+    decay_to_end = jnp.exp(acum[:, :, -1:, :] - acum)    # (b,nc,c,h)
+    states = jnp.einsum("bzsn,bzsh,bzshp->bzhpn",
+                        Bc.astype(jnp.float32), decay_to_end,
+                        xc.astype(jnp.float32))          # (b,nc,h,p,n)
+
+    # inter-chunk recurrence
+    a_tot = jnp.exp(acum[:, :, -1, :])                   # (b,nc,h)
+    states_t = jnp.moveaxis(states, 1, 0)                # (nc,b,h,p,n)
+    a_tot_t = jnp.moveaxis(a_tot, 1, 0)                  # (nc,b,h)
+
+    def step(prev, inp):
+        st, at = inp
+        new = prev * at[..., None, None] + st
+        return new, prev                                  # emit entering state
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, entering = jax.lax.scan(step, init, (states_t, a_tot_t))
+    entering = jnp.moveaxis(entering, 0, 1)              # (b,nc,h,p,n)
+
+    y_off = jnp.einsum("bzln,bzhpn,bzlh->bzlhp",
+                       Cc.astype(jnp.float32), entering, jnp.exp(acum))
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(xdt.dtype), final
+
+
+def ssm_mixer(cfg, x, p, state=None, pos=None):
+    """Full SSD mixer.  x: (B, S, D).
+
+    p: in_proj (D, 2·d_inner + 2·N + H), dt_bias (H,), A_log (H,),
+       D_skip (H,), norm_g (d_inner), out_proj (d_inner, D).
+    If ``state`` is given (decode: S==1), runs the O(1) recurrence and
+    returns (y, new_state); else returns (y, final_state).
+    """
+    Bsz, S, D = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xs, Bv, Cv, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a_log = -jnp.exp(p["A_log"]) * dt                            # (B,S,H)
+    xh = xs.reshape(Bsz, S, H, P)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+
+    if state is None:
+        y, final = ssd_forward(xdt, a_log, Bv, Cv, cfg.ssm_chunk)
+    else:
+        # single-step recurrence: state (B,H,P,N)
+        a = jnp.exp(a_log[:, 0])                                 # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xdt[:, 0].astype(jnp.float32),
+                         Bv[:, 0].astype(jnp.float32))
+        final = state * a[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", final,
+                       Cv[:, 0].astype(jnp.float32))[:, None]
+        y = y.astype(x.dtype)
+
+    y = y + xh * p["D_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(Bsz, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_g"])                 # gated norm
+    out = y @ p["out_proj"]
+    return out, final
+
+
+def ssm_param_shapes(cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    D = cfg.d_model
+    return {
+        "in_proj": (D, 2 * di + 2 * N + H),
+        "dt_bias": (H,),
+        "A_log": (H,),
+        "D_skip": (H,),
+        "norm_g": (di,),
+        "out_proj": (di, D),
+    }

@@ -1,0 +1,8 @@
+"""repro.optim — AdamW (plain / int8 moments / fusion-compiler fused)."""
+from .adamw import (AdamWHyper, abstract_opt_state, apply_adamw, dequantize,
+                    init_opt_state, quantize, schedule)
+from .fused import fused_adamw_update, make_fused_adamw
+
+__all__ = ["AdamWHyper", "abstract_opt_state", "apply_adamw", "dequantize",
+           "fused_adamw_update", "init_opt_state", "make_fused_adamw",
+           "quantize", "schedule"]

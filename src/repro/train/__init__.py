@@ -1,0 +1,4 @@
+"""repro.train — train/serve step factories."""
+from . import steps
+
+__all__ = ["steps"]

@@ -1,0 +1,136 @@
+"""train_step / serve_step — the functions the launcher jits with
+shardings and the dry-run lowers for every (arch × shape × mesh) cell."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.optim import AdamWHyper, apply_adamw
+
+
+def make_train_step(cfg, hyper: AdamWHyper, accum: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": f32 master tree, "params_c": bf16 compute copy,
+    "opt": {"m","v","step"}}.  The bf16 copy (perf iteration P9b) is what
+    the forward pass consumes, so FSDP weight all-gathers move bf16 on
+    the wire — XLA otherwise sinks an in-graph cast below the gather and
+    ships the f32 masters (measured, EXPERIMENTS.md §Perf).  The copy is
+    refreshed from the updated masters at the end of the step (sharded,
+    collective-free) and costs 2 bytes/param of sharded HBM.
+
+    ``accum`` > 1 enables gradient accumulation: the global batch is
+    split into microbatches scanned sequentially (memory ÷ accum).
+    """
+
+    def loss_fn(params, batch):
+        return models.lm_loss(cfg, params, batch)
+
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def cast_tree(t):
+        return jax.tree_util.tree_map(
+            lambda x: x.astype(cd)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, t)
+
+    def train_step(state, batch):
+        # P4: differentiate w.r.t. the bf16 copy so the FSDP gradient
+        # reduction runs on bf16 wires; the optimizer consumes f32-upcast
+        # grads against the f32 masters.
+        params = (state["params_c"] if "params_c" in state
+                  else cast_tree(state["params"]))
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+            params = state["params"]
+        else:
+            def micro(b):
+                return jax.tree_util.tree_map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum,
+                                        *x.shape[1:]), b)
+
+            mb = micro(batch)
+
+            def body(carry, b):
+                acc_g, acc_l = carry
+                (l, met), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, b)
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), acc_g, g)
+                return (acc_g, acc_l + l), met
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), mets = jax.lax.scan(body, (zero_g, 0.0), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], mets)
+            params = state["params"]
+
+        new_params, new_opt, opt_metrics = apply_adamw(
+            cfg, hyper, params, grads, state["opt"])
+        metrics = dict(metrics) | opt_metrics | {"loss": loss}
+        new_state = {"params": new_params, "opt": new_opt}
+        if "params_c" in state:
+            new_state["params_c"] = cast_tree(new_params)   # P9b refresh
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    """serve prefill: (params, batch) -> (last logits, cache)."""
+
+    def prefill_step(params, batch):
+        return models.prefill(cfg, params, batch["tokens"],
+                              patches=batch.get("patches"),
+                              frames=batch.get("frames"))
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    """serve decode: (params, cache, tokens, pos) -> (next ids, logits,
+    new cache).  One new token against a seq_len KV cache."""
+
+    def decode_step(params, cache, tokens, pos):
+        logits, cache = models.decode_step(cfg, params, cache, tokens, pos)
+        next_ids = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_ids, logits, cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs for lowering (the dry-run contract)
+# ---------------------------------------------------------------------------
+
+def abstract_batch(cfg, shape) -> dict:
+    """ShapeDtypeStruct stand-ins for the data batch of a shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cd = jnp.dtype(cfg.compute_dtype)
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+             "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), cd)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_frames, cfg.d_model), cd)
+    return batch
+
+
+def abstract_decode_inputs(cfg, shape):
+    B, S = shape.global_batch, shape.seq_len
+    return {
+        "cache": models.abstract_cache(cfg, B, S),
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

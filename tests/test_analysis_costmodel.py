@@ -1,0 +1,95 @@
+"""Unit tests for the dry-run analysis layer: HLO collective parsing with
+while-loop trip-count recovery, and cost-model invariants."""
+import textwrap
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.launch import analysis, costmodel
+
+HLO = textwrap.dedent("""
+    %region_1.10 {
+      %cc = s32[] constant(32)
+      %cmp = pred[] compare(%p, %cc), direction=LT
+    }
+    %region_2.20 {
+      %ag.1 = f32[16,128]{1,0} all-gather(%x), dimensions={0}
+      %ar.1 = bf16[8,128]{1,0} all-reduce(%y), to_apply=%add
+    }
+    ENTRY %main.5 {
+      %w = (s32[], f32[2]) while(%init), condition=%region_1.10, body=%region_2.20
+      %ag.2 = f32[4,128]{1,0} all-gather(%z), dimensions={0}
+    }
+""")
+
+
+def test_collective_parsing_with_trip_counts():
+    colls = analysis.parse_collectives(HLO)
+    by_kind = {}
+    for c in colls:
+        by_kind.setdefault(c.kind, []).append(c)
+    ags = sorted(by_kind["all-gather"], key=lambda c: c.bytes)
+    # entry-level gather: multiplier 1
+    assert ags[0].multiplier == 1 and ags[0].bytes == 4 * 128 * 4
+    # loop-body gather: multiplier == trip count 32
+    assert ags[1].multiplier == 32 and ags[1].bytes == 16 * 128 * 4
+    ar = by_kind["all-reduce"][0]
+    assert ar.multiplier == 32 and ar.bytes == 8 * 128 * 2
+    summ = analysis.collective_summary(colls)
+    want = (2.0 * ar.bytes * 32          # all-reduce factor 2
+            + ags[1].bytes * 32 + ags[0].bytes)
+    assert summ["wire_bytes_per_device"] == pytest.approx(want)
+
+
+def test_nested_loop_multipliers():
+    hlo = textwrap.dedent("""
+        %inner_cond.1 {
+          %c = s32[] constant(4)
+        }
+        %inner_body.2 {
+          %ar = f32[128]{0} all-reduce(%v), to_apply=%add
+        }
+        %outer_cond.3 {
+          %c2 = s32[] constant(8)
+        }
+        %outer_body.4 {
+          %w2 = (s32[]) while(%i), condition=%inner_cond.1, body=%inner_body.2
+        }
+        ENTRY %main {
+          %w1 = (s32[]) while(%j), condition=%outer_cond.3, body=%outer_body.4
+        }
+    """)
+    colls = analysis.parse_collectives(hlo)
+    assert len(colls) == 1
+    assert colls[0].multiplier == 32  # 8 outer * 4 inner
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "grok1_314b", "mamba2_2p7b",
+                                  "whisper_medium", "deepseek_v2_lite"])
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_costmodel_invariants(arch, shape):
+    cfg = get_config(arch)
+    est = costmodel.estimate(cfg, SHAPES[shape])
+    assert est.model_flops > 0
+    assert est.impl_flops >= est.model_flops * 0.3   # sane ratio
+    assert est.hbm_bytes > cfg.params_count()         # at least one stream
+    terms = est.terms(chips=256, collective_wire_bytes_per_dev=1e9)
+    assert terms["dominant"] in ("compute", "memory", "collective")
+    assert 0 < terms["roofline_fraction"] <= 1.0 + 1e-9
+    assert terms["step_lower_bound_s"] >= max(
+        terms["t_compute_s"], terms["t_memory_s"]) - 1e-12
+
+
+def test_train_flops_scale_with_tokens():
+    cfg = get_config("llama3_8b")
+    t4k = costmodel.estimate(cfg, SHAPES["train_4k"])
+    # 6 * N * D rule
+    n = cfg.active_params_count() - cfg.vocab * cfg.d_model
+    assert t4k.model_flops == pytest.approx(
+        6.0 * n * SHAPES["train_4k"].tokens, rel=1e-6)
+
+
+def test_decode_memory_dominated_by_cache_at_32k():
+    cfg = get_config("llama3_8b")
+    est = costmodel.estimate(cfg, SHAPES["decode_32k"])
+    assert est.notes["cache_bytes"] > 0.3 * est.hbm_bytes

@@ -1,0 +1,102 @@
+"""Unit tests for the fusion compiler: legality rules, cost model,
+scheduling — the paper's §3.2/§4.2 behaviours."""
+import numpy as np
+import pytest
+
+from repro.blas import REGISTRY, elementary_lib as lib
+from repro.core import (FusionCompiler, analyse_group, best_combination,
+                        build_space, enumerate_fusions, saves_traffic, trace,
+                        unfused_combination)
+
+
+def _graph(name, n=256):
+    seq = REGISTRY[name]
+    return trace(seq.script, seq.shapes(n))
+
+
+class TestLegality:
+    def test_atax_not_fusible(self):
+        """Paper §5.1: ATAX needs a global barrier between the two
+        matvecs (t is a finished reduction) — no 2-call fusion exists."""
+        g = _graph("ATAX")
+        fusions = enumerate_fusions(g)
+        assert all(len(f.calls) == 1 for f in fusions)
+
+    def test_bicgk_fusible(self):
+        """Paper §4.4: gemv+gemtv share A and both reduce — fusible."""
+        g = _graph("BiCGK")
+        fusions = enumerate_fusions(g)
+        assert any(len(f.calls) == 2 for f in fusions)
+
+    def test_reduce_is_sink(self):
+        """A reduce's consumer can never join its fusion (§3.2.2)."""
+        g = _graph("AXPYDOT")
+        # calls: axmy(0), ew_mul(1), sum_reduce(2); nothing consumes the
+        # reduce inside this graph, so the 3-fusion is legal
+        assert analyse_group(g, g.calls) is not None
+        # but in SGEMVT, xpay consumes gemtv's finished reduction:
+        g2 = _graph("SGEMVT")
+        gemtv_call = g2.calls[0]
+        xpay_call = g2.calls[1]
+        assert analyse_group(g2, [gemtv_call, xpay_call]) is None
+
+    def test_depth_mixing_rejected(self):
+        """Nested (depth-2) never fuses with unnested (depth-1) §3.2.3."""
+        g = _graph("SGEMV")
+        gemv_call, axpby_call = g.calls[0], g.calls[1]
+        assert analyse_group(g, [gemv_call, axpby_call]) is None
+
+    def test_convexity(self):
+        """p→x→c with x outside the group is rejected (§4.2)."""
+        g = _graph("GEMVER")
+        calls = {c.elem.name + str(i): c for i, c in enumerate(g.calls)}
+        names = [c.elem.name for c in g.calls]
+        # rank2_update(0) -> gemtv(1) -> xpay(2) -> gemv(3)
+        assert names[:4] == ["rank2_update", "gemtv", "xpay", "gemv"]
+        assert analyse_group(g, [g.calls[0], g.calls[3]]) is None
+
+    def test_disconnected_pruned(self):
+        g = _graph("BiCGK")
+        # p-only and r-only calls are connected through A, so this passes;
+        # construct disconnectedness via saves_traffic on WAXPBY pieces
+        g2 = _graph("GESUMMV")
+        t1, t2 = g2.calls[0], g2.calls[1]
+        f = analyse_group(g2, [t1, t2])
+        assert f is not None and saves_traffic(f, g2)  # share x
+
+
+class TestSchedule:
+    @pytest.mark.parametrize("name", list(REGISTRY))
+    def test_partition_covers(self, name):
+        g = _graph(name)
+        space = build_space(g)
+        combo = best_combination(space)
+        covered = sorted(i for im in combo.impls for i in im.fusion.key)
+        assert covered == list(range(len(g.calls)))
+
+    def test_best_no_worse_than_unfused(self):
+        for name in REGISTRY:
+            g = _graph(name)
+            space = build_space(g)
+            assert (best_combination(space).t_pred
+                    <= unfused_combination(space).t_pred + 1e-12)
+
+    def test_fusion_reduces_traffic_bicgk(self):
+        g = _graph("BiCGK", n=512)
+        space = build_space(g)
+        best = best_combination(space)
+        unf = unfused_combination(space)
+        t_best = sum(i.traffic_bytes for i in best.impls)
+        t_unf = sum(i.traffic_bytes for i in unf.impls)
+        # fused reads A once instead of twice: ~2x less traffic
+        assert t_best < 0.6 * t_unf
+
+
+class TestVmemPruning:
+    def test_footprint_bounded(self):
+        g = _graph("GEMVER", n=1024)
+        space = build_space(g)
+        from repro.core import V5E
+        for impls in space.impls_by_fusion.values():
+            for im in impls:
+                assert im.vmem_bytes <= V5E.vmem_bytes

@@ -1,0 +1,135 @@
+"""Property-based tests (hypothesis): the compiler preserves program
+semantics for arbitrary random map/reduce scripts and combination
+choices; numeric invariants of the quantizer and predictor."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (FusionCompiler, build_space, codegen,
+                        enumerate_combinations, trace)
+from repro.core.elementary import make_map, make_reduce, Monoid
+from repro.blas import elementary_lib as lib
+
+# a pool of depth-1 elementary maps to compose random scripts from
+UNARY = [
+    make_map("neg", lambda x: -x, arity=1),
+    make_map("sq", lambda x: x * x, arity=1),
+    make_map("half", lambda x: 0.5 * x, arity=1),
+]
+BINARY = [
+    make_map("add", lambda x, y: x + y, arity=2),
+    make_map("sub", lambda x, y: x - y, arity=2),
+    make_map("mul", lambda x, y: x * y, arity=2),
+]
+SUM = make_reduce("rsum", Monoid.SUM)
+
+
+@st.composite
+def random_script(draw):
+    n_inputs = draw(st.integers(2, 3))
+    n_ops = draw(st.integers(2, 6))
+    ops = []
+    for i in range(n_ops):
+        if draw(st.booleans()):
+            ops.append(("u", draw(st.integers(0, len(UNARY) - 1)),
+                        draw(st.integers(0, n_inputs + i - 1))))
+        else:
+            ops.append(("b", draw(st.integers(0, len(BINARY) - 1)),
+                        draw(st.integers(0, n_inputs + i - 1)),
+                        draw(st.integers(0, n_inputs + i - 1))))
+    with_reduce = draw(st.booleans())
+    n_outputs = draw(st.integers(1, 2))
+    return n_inputs, ops, with_reduce, n_outputs
+
+
+def build(spec):
+    n_inputs, ops, with_reduce, n_outputs = spec
+
+    def script(g, **kw):
+        vals = [kw[f"x{i}"] for i in range(n_inputs)]
+        for op in ops:
+            if op[0] == "u":
+                vals.append(g.apply(UNARY[op[1]], vals[op[2]]))
+            else:
+                vals.append(g.apply(BINARY[op[1]], vals[op[2]], vals[op[3]]))
+        outs = list(vals[-n_outputs:])
+        if with_reduce:
+            outs.append(g.apply(SUM, vals[-1]))
+        return tuple(outs)
+
+    shapes = {f"x{i}": (256,) for i in range(n_inputs)}
+    return script, shapes
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_script())
+def test_random_scripts_best_matches_oracle(spec):
+    script, shapes = build(spec)
+    cc = FusionCompiler()
+    g = trace(script, shapes)
+    rng = np.random.default_rng(0)
+    inputs = {k: rng.standard_normal(v).astype(np.float32)
+              for k, v in shapes.items()}
+    want = codegen.execute_dense(g, inputs)
+    prog = cc.compile(script, shapes, mode="best")
+    got = prog(**inputs)
+    for w, o in zip(jnp.asarray(want).reshape(-1) if not isinstance(want, tuple) else want,
+                    jnp.asarray(got).reshape(-1) if not isinstance(got, tuple) else got):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(w),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(random_script(), st.integers(0, 5))
+def test_random_scripts_any_combination_matches(spec, rank):
+    """EVERY legal combination computes the same function."""
+    script, shapes = build(spec)
+    g = trace(script, shapes)
+    space = build_space(g)
+    combos = enumerate_combinations(space, limit=rank + 1)
+    combo = combos[min(rank, len(combos) - 1)]
+    rng = np.random.default_rng(1)
+    inputs = {k: rng.standard_normal(v).astype(np.float32)
+              for k, v in shapes.items()}
+    want = codegen.execute_dense(g, inputs)
+    prog = codegen.compile_combination(g, combo, backend="jnp")
+    got = prog(**inputs)
+    want_t = want if isinstance(want, tuple) else (want,)
+    got_t = got if isinstance(got, tuple) else (got,)
+    for w, o in zip(want_t, got_t):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(w),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4096), st.floats(1e-6, 1e4))
+def test_quantize_roundtrip_bound(n, scale):
+    """int8 blockwise quantization: |x - dq(q(x))| <= blockmax/254."""
+    from repro.optim import dequantize, quantize
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+    q, s = quantize(x)
+    y = dequantize(q, s, n)
+    blocks = int(np.ceil(n / 128))
+    xpad = np.zeros(blocks * 128, np.float32)
+    xpad[:n] = np.asarray(x)
+    bmax = np.abs(xpad.reshape(blocks, 128)).max(axis=1)
+    tol = np.repeat(bmax, 128)[:n] / 254.0 + 1e-9
+    assert np.all(np.abs(np.asarray(y) - np.asarray(x)) <= tol)
+
+
+def test_predictor_monotonic_in_traffic():
+    """More HBM traffic never predicts faster (same flops/overhead)."""
+    from repro.core.predictor import V5E
+    from repro.blas import REGISTRY
+    seq = REGISTRY["BiCGK"]
+    g = trace(seq.script, seq.shapes(512))
+    space = build_space(g)
+    for impls in space.impls_by_fusion.values():
+        for a in impls:
+            for b in impls:
+                if (a.traffic_bytes <= b.traffic_bytes
+                        and a.flops == b.flops):
+                    assert a.t_pred <= b.t_pred + 1e-12
