@@ -1,11 +1,16 @@
 """Benchmark entry point — one section per paper table + framework-side
 fused-kernel benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--emit-json [PATH]]
+
+``--emit-json`` additionally writes per-sequence predicted + measured
+speedups to ``BENCH_fusion.json`` so the perf trajectory is tracked
+across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -14,6 +19,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / fewer iters")
     ap.add_argument("--skip-search", action="store_true")
+    ap.add_argument("--emit-json", nargs="?", const="BENCH_fusion.json",
+                    default=None, metavar="PATH",
+                    help="write per-sequence predicted+measured speedups "
+                         "to PATH (default BENCH_fusion.json)")
     args = ap.parse_args()
     n = 1024 if args.quick else 2048
     iters = 3 if args.quick else 5
@@ -22,6 +31,7 @@ def main() -> None:
 
     # --- paper Table 2/3: sequence throughput + traffic ---------------------
     from benchmarks import blas_sequences
+    bench_rows = []
     for r in blas_sequences.run_all(n=n, iters=iters):
         print(f"T2_{r['name']}_fused,{r['t_fused_us']:.1f},"
               f"speedup={r['speedup_measured']:.2f}x")
@@ -29,6 +39,22 @@ def main() -> None:
               f"traffic_ratio={r['traffic_ratio']:.2f}")
         print(f"T3_{r['name']}_v5e_pred,{r['pred_v5e_fused_us']:.2f},"
               f"gflops={r['gflops_fused_v5e']:.1f}")
+        bench_rows.append({
+            "name": r["name"], "n": r["n"],
+            "speedup_predicted": r["pred_v5e_unfused_us"]
+            / max(r["pred_v5e_fused_us"], 1e-12),
+            "speedup_measured": r["speedup_measured"],
+            "traffic_ratio": r["traffic_ratio"],
+            "t_fused_us": r["t_fused_us"],
+            "t_unfused_us": r["t_unfused_us"],
+            "paper_speedup": r.get("paper_speedup"),
+        })
+    if args.emit_json:
+        with open(args.emit_json, "w") as f:
+            json.dump({"n": n, "iters": iters, "sequences": bench_rows}, f,
+                      indent=1)
+        print(f"BENCH_json,{len(bench_rows)},written:{args.emit_json}",
+              file=sys.stderr)
 
     # --- paper Table 4: search space + prediction rank -----------------------
     if not args.skip_search:

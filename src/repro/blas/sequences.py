@@ -207,12 +207,55 @@ _register(Sequence(
     lambda n: 3.0 * n))
 
 
-def make_inputs(seq: Sequence, n: int, seed: int = 0) -> dict[str, np.ndarray]:
+def make_inputs(seq: Sequence, n: int, seed: int = 0,
+                dtype=np.float32) -> dict[str, np.ndarray]:
     rng = np.random.default_rng(seed)
+    dtype = np.dtype(dtype)
     out = {}
     for name, shape in seq.shapes(n).items():
         if shape == ():
-            out[name] = np.float32(rng.uniform(0.5, 1.5))
+            out[name] = dtype.type(rng.uniform(0.5, 1.5))
         else:
-            out[name] = rng.standard_normal(shape).astype(np.float32)
+            out[name] = rng.standard_normal(shape).astype(dtype)
     return out
+
+
+# ---------------------------------------------------------------------------
+# synthetic sequences — scale the search past the paper's hand-sized scripts
+# ---------------------------------------------------------------------------
+
+def make_synthetic_chain(n_calls: int):
+    """A depth-1 map/accumulate chain of ``n_calls`` elementary calls.
+
+    Mimics the dataflow of long vector pipelines (paper sequences are
+    ≤ 5 calls; serving-scale graphs are not).  Returns ``(script,
+    shapes_fn, reference)`` in the ``Sequence`` calling convention so
+    tests and benchmarks can drive the full compiler pipeline on graphs
+    of arbitrary length."""
+
+    def script(g, a, b):
+        v = g.apply(lib.ew_add, a, b)
+        vals = [a, b, v]
+        for i in range(n_calls - 1):
+            if i % 3 == 2:
+                v = g.apply(lib.ew_add, vals[-1], vals[-2])
+            else:
+                v = g.apply(lib.ew_mul, vals[-1], vals[-3])
+            vals.append(v)
+        return (vals[-1],)
+
+    def shapes(n):
+        return {"a": (n,), "b": (n,)}
+
+    def reference(a, b):
+        v = a + b
+        vals = [a, b, v]
+        for i in range(n_calls - 1):
+            if i % 3 == 2:
+                v = vals[-1] + vals[-2]
+            else:
+                v = vals[-1] * vals[-3]
+            vals.append(v)
+        return (vals[-1],)
+
+    return script, shapes, reference

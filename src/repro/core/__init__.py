@@ -1,21 +1,26 @@
 """repro.core — the paper's contribution: a fusion compiler for
 map/reduce elementary functions (Filipovič et al., 2013)."""
+from .cache import CacheStats, PlanCache, default_cache
 from .compiler import CompileReport, FusionCompiler
 from .elementary import (ArgSpec, Elementary, Kind, Monoid, make_map,
                          make_nested_map, make_nested_map_reduce, make_reduce)
 from .fusion import Fusion, analyse_group, enumerate_fusions, saves_traffic
 from .graph import CallNode, Graph, Var, trace
+from .plan import ExecutionPlan, GroupPlan, build_plan, graph_signature
 from .predictor import V5E, HardwareModel, Impl, enumerate_impls
 from .scheduler import (Combination, OptimizationSpace, best_combination,
                         build_space, enumerate_combinations,
+                        exhaustive_best_combination, iter_combinations,
                         unfused_combination)
 
 __all__ = [
-    "ArgSpec", "CallNode", "Combination", "CompileReport", "Elementary",
-    "Fusion", "FusionCompiler", "Graph", "HardwareModel", "Impl", "Kind",
-    "Monoid", "OptimizationSpace", "V5E", "Var", "analyse_group",
-    "best_combination", "build_space", "enumerate_combinations",
-    "enumerate_fusions", "enumerate_impls", "make_map", "make_nested_map",
-    "make_nested_map_reduce", "make_reduce", "saves_traffic", "trace",
-    "unfused_combination",
+    "ArgSpec", "CacheStats", "CallNode", "Combination", "CompileReport",
+    "Elementary", "ExecutionPlan", "Fusion", "FusionCompiler", "Graph",
+    "GroupPlan", "HardwareModel", "Impl", "Kind", "Monoid",
+    "OptimizationSpace", "PlanCache", "V5E", "Var", "analyse_group",
+    "best_combination", "build_plan", "build_space", "default_cache",
+    "enumerate_combinations", "enumerate_fusions", "enumerate_impls",
+    "exhaustive_best_combination", "graph_signature", "iter_combinations",
+    "make_map", "make_nested_map", "make_nested_map_reduce", "make_reduce",
+    "saves_traffic", "trace", "unfused_combination",
 ]

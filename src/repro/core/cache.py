@@ -1,0 +1,152 @@
+"""Persistent plan/kernel cache (DESIGN.md §5).
+
+Two content-addressed layers, both keyed on hex digests computed by the
+compiler:
+
+* **program layer** (in-memory LRU only) — maps a *pre-trace* key
+  (script code hash, input shapes, dtype, backend, hw, mode) straight to
+  a finished ``CompiledProgram``.  A hit skips trace, search and codegen
+  entirely — the steady-state serving case where the same sequence is
+  compiled again in-process.
+* **plan layer** (in-memory LRU + optional on-disk JSON) — maps a
+  *post-trace* key (graph signature, backend, hw, mode) to a serialized
+  ``ExecutionPlan``.  A hit skips optimization-space generation and the
+  combination search (the expensive stages); codegen re-binds the plan
+  to the fresh trace.  The disk layer survives process restarts: set
+  ``REPRO_PLAN_CACHE_DIR`` or pass ``disk_dir``.
+
+Both layers are bounded LRU; ``stats`` exposes hit/miss counters so the
+serving path can be monitored.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import tempfile
+from typing import Any
+
+from .plan import ExecutionPlan
+
+_ENV_DIR = "REPRO_PLAN_CACHE_DIR"
+
+
+@dataclasses.dataclass
+class CacheStats:
+    program_hits: int = 0
+    program_misses: int = 0
+    plan_hits: int = 0
+    plan_misses: int = 0
+    disk_hits: int = 0
+    disk_writes: int = 0
+
+    def as_dict(self) -> dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class _LRU:
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._d: collections.OrderedDict[str, Any] = collections.OrderedDict()
+
+    def get(self, key: str):
+        if key not in self._d:
+            return None
+        self._d.move_to_end(key)
+        return self._d[key]
+
+    def put(self, key: str, value: Any):
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    def __len__(self):
+        return len(self._d)
+
+    def clear(self):
+        self._d.clear()
+
+
+class PlanCache:
+    def __init__(self, capacity: int = 256, disk_dir: str | None = None):
+        self._programs = _LRU(capacity)
+        self._plans = _LRU(capacity)
+        self.disk_dir = disk_dir if disk_dir is not None else os.environ.get(_ENV_DIR)
+        self.stats = CacheStats()
+
+    # -- program layer ------------------------------------------------------
+    def get_program(self, key: str):
+        prog = self._programs.get(key)
+        if prog is None:
+            self.stats.program_misses += 1
+        else:
+            self.stats.program_hits += 1
+        return prog
+
+    def put_program(self, key: str, prog: Any):
+        self._programs.put(key, prog)
+
+    # -- plan layer ---------------------------------------------------------
+    def _disk_path(self, key: str) -> str | None:
+        if not self.disk_dir:
+            return None
+        return os.path.join(self.disk_dir, f"{key}.plan.json")
+
+    def get_plan(self, key: str) -> ExecutionPlan | None:
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.stats.plan_hits += 1
+            return plan
+        path = self._disk_path(key)
+        if path and os.path.exists(path):
+            try:
+                with open(path) as f:
+                    plan = ExecutionPlan.from_json(f.read())
+            except (OSError, ValueError):
+                plan = None  # stale/corrupt entry: fall through to a miss
+            if plan is not None:
+                self.stats.plan_hits += 1
+                self.stats.disk_hits += 1
+                self._plans.put(key, plan)
+                return plan
+        self.stats.plan_misses += 1
+        return None
+
+    def put_plan(self, key: str, plan: ExecutionPlan):
+        self._plans.put(key, plan)
+        path = self._disk_path(key)
+        if path:
+            # a broken cache dir degrades to a miss, never fails the compile
+            tmp = None
+            try:
+                os.makedirs(self.disk_dir, exist_ok=True)
+                # atomic write: concurrent compilers never read a torn file
+                fd, tmp = tempfile.mkstemp(dir=self.disk_dir, suffix=".tmp")
+                with os.fdopen(fd, "w") as f:
+                    f.write(plan.to_json())
+                os.replace(tmp, path)
+                self.stats.disk_writes += 1
+            except OSError:
+                if tmp is not None:
+                    try:
+                        os.unlink(tmp)
+                    except OSError:
+                        pass
+
+    def clear(self):
+        self._programs.clear()
+        self._plans.clear()
+        self.stats = CacheStats()
+
+
+_default: PlanCache | None = None
+
+
+def default_cache() -> PlanCache:
+    """Process-wide shared cache (used when a compiler doesn't bring its
+    own)."""
+    global _default
+    if _default is None:
+        _default = PlanCache()
+    return _default

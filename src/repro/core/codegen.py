@@ -18,6 +18,15 @@ Two backends:
 
 TPUs have no atomics, so the paper's ``atomicAdd`` variant (iii) is not
 available — this is a documented hardware adaptation (DESIGN.md §2).
+
+Execution model (DESIGN.md §4): codegen consumes an ``ExecutionPlan``
+and emits ONE jitted whole-program function.  Groups become
+sub-functions inlined into it; values are routed by the plan's index
+table (no Var dictionaries, no per-group Python dispatch on the hot
+path).  On the ``jnp`` backend an ``optimization_barrier`` between
+groups keeps XLA from fusing across the compiler's chosen kernel
+boundaries, so the fused/unfused comparison stays meaningful; on the
+``pallas`` backend each group is one opaque ``pallas_call`` anyway.
 """
 from __future__ import annotations
 
@@ -33,7 +42,8 @@ from jax.experimental import pallas as pl
 from .elementary import Monoid
 from .fusion import Fusion
 from .graph import Graph, Var
-from .predictor import Impl, accumulable, reduce_roots_of
+from .plan import ExecutionPlan, build_plan
+from .predictor import V5E, HardwareModel, Impl, accumulable, reduce_roots_of
 from .scheduler import Combination
 
 
@@ -113,23 +123,23 @@ def _group_pallas_fn(g: Graph, impl: Impl, interpret: bool = True) -> Callable:
         if not rr:
             out_specs.append(pl.BlockSpec(tuple(blk[r] for r in vr),
                                           make_index_map(vr)))
-            out_shapes.append(jax.ShapeDtypeStruct(v.shape, jnp.float32))
+            out_shapes.append(jax.ShapeDtypeStruct(v.shape, v.dtype))
             out_mode.append(("map", None))
         elif accumulable(v, f, g, order):
             if v.shape == ():  # full reduction to scalar: (1,1) carrier
                 out_specs.append(pl.BlockSpec((1, 1), lambda *g_: (0, 0)))
-                out_shapes.append(jax.ShapeDtypeStruct((1, 1), jnp.float32))
+                out_shapes.append(jax.ShapeDtypeStruct((1, 1), v.dtype))
             else:
                 out_specs.append(pl.BlockSpec(tuple(blk[r] for r in vr),
                                               make_index_map(vr)))
-                out_shapes.append(jax.ShapeDtypeStruct(v.shape, jnp.float32))
+                out_shapes.append(jax.ShapeDtypeStruct(v.shape, v.dtype))
             out_mode.append(("acc", tuple(pos[r] for r in rr)))
         else:
             lead = tuple(grid[pos[r]] for r in rr)
             block = (1,) * len(rr) + tuple(blk[r] for r in vr)
             out_specs.append(pl.BlockSpec(
                 block, make_index_map(vr, lead_roots=rr)))
-            out_shapes.append(jax.ShapeDtypeStruct(lead + v.shape, jnp.float32))
+            out_shapes.append(jax.ShapeDtypeStruct(lead + v.shape, v.dtype))
             out_mode.append(("partial", tuple(range(len(rr)))))
 
     n_in = len(f.external_inputs)
@@ -177,7 +187,7 @@ def _group_pallas_fn(g: Graph, impl: Impl, interpret: bool = True) -> Callable:
     def run(*ext_vals):
         vals = []
         for v, x, is_scalar in zip(f.external_inputs, ext_vals, in_is_scalar):
-            x = jnp.asarray(x, jnp.float32)
+            x = jnp.asarray(x, v.dtype)
             vals.append(jnp.reshape(x, (1, 1)) if is_scalar else x)
         raw = call(*vals)
         outs = []
@@ -200,61 +210,80 @@ def _group_pallas_fn(g: Graph, impl: Impl, interpret: bool = True) -> Callable:
 
 @dataclasses.dataclass
 class CompiledProgram:
-    """Executable for one combination; groups run as separate kernels."""
+    """Executable for one plan: a single jitted whole-program function.
+
+    Steady-state dispatch is ONE call into XLA — the per-group Python
+    loop runs only once, at trace time.  ``fn`` is vmap/batch-friendly:
+    it is a pure positional function over the graph inputs."""
 
     graph: Graph
-    combination: Combination
-    group_fns: list[Callable]      # jitted, in topological group order
-    group_order: list[Impl]
+    plan: ExecutionPlan
+    group_impls: list[Impl]        # topological order, bound to `graph`
+    fn: Callable                   # jitted (*input_vals) -> tuple(outputs)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.plan.groups)
 
     def __call__(self, **inputs):
-        vals: dict[Var, Any] = {}
-        for v in self.graph.inputs:
-            if v.name not in inputs:
-                raise KeyError(f"missing input {v.name}")
-            vals[v] = inputs[v.name]
-        for impl, fn in zip(self.group_order, self.group_fns):
-            f = impl.fusion
-            outs = fn(*[vals[a] for a in f.external_inputs])
-            for v, o in zip(f.outputs, outs):
-                vals[v] = o
-        outs = tuple(vals[v] for v in self.graph.outputs)
+        args = []
+        for name in self.plan.input_names:
+            if name not in inputs:
+                raise KeyError(f"missing input {name}")
+            args.append(inputs[name])
+        outs = self.fn(*args)
         return outs[0] if len(outs) == 1 else outs
 
     def block_until_ready(self, result):
-        return jax.tree_util.tree_map(lambda x: x.block_until_ready(), result)
+        return jax.tree_util.tree_map(
+            lambda x: x.block_until_ready()
+            if hasattr(x, "block_until_ready") else x, result)
 
 
-def _topo_group_order(g: Graph, combo: Combination) -> list[Impl]:
-    remaining = list(combo.impls)
-    ready_vars = set(g.inputs)
-    ordered: list[Impl] = []
-    while remaining:
-        progressed = False
-        for im in list(remaining):
-            if all(a in ready_vars for a in im.fusion.external_inputs):
-                ordered.append(im)
-                ready_vars |= set(im.fusion.outputs)
-                ready_vars |= set(im.fusion.internal_vars)
-                remaining.remove(im)
-                progressed = True
-        if not progressed:
-            raise RuntimeError("cyclic combination — scheduler bug")
-    return ordered
+def _program_fn(plan: ExecutionPlan, impls: list[Impl], fns: list[Callable],
+                backend: str) -> Callable:
+    """The whole program as one pure function, values routed by the
+    plan's index table (plan.GroupPlan.inputs / plan.outputs)."""
+
+    def read(ref, inputs, group_outs):
+        if ref[0] == "input":
+            return inputs[ref[1]]
+        return group_outs[ref[1]][ref[2]]
+
+    def program(*input_vals):
+        inputs = dict(zip(plan.input_names, input_vals))
+        group_outs: list[tuple] = []
+        for gp, fn in zip(plan.groups, fns):
+            outs = fn(*[read(r, inputs, group_outs) for r in gp.inputs])
+            if backend == "jnp" and len(plan.groups) > 1:
+                # kernel boundary: stop XLA fusing across groups
+                outs = jax.lax.optimization_barrier(outs)
+            group_outs.append(outs)
+        return tuple(read(r, inputs, group_outs) for r in plan.outputs)
+
+    program.__name__ = "program_" + plan.signature[:8]
+    return program
+
+
+def compile_plan(g: Graph, plan: ExecutionPlan, hw: HardwareModel = V5E,
+                 interpret: bool = True, jit: bool = True) -> CompiledProgram:
+    """ExecutionPlan -> executable (one jitted whole-program function)."""
+    impls = plan.bind(g, hw)
+    fns = []
+    for im in impls:
+        if plan.backend == "jnp":
+            fns.append(_group_dense_fn(im.fusion))
+        elif plan.backend == "pallas":
+            fns.append(_group_pallas_fn(g, im, interpret=interpret))
+        else:
+            raise ValueError(f"unknown backend {plan.backend}")
+    program = _program_fn(plan, impls, fns, plan.backend)
+    return CompiledProgram(graph=g, plan=plan, group_impls=impls,
+                           fn=jax.jit(program) if jit else program)
 
 
 def compile_combination(g: Graph, combo: Combination, backend: str = "jnp",
-                        interpret: bool = True, jit: bool = True
-                        ) -> CompiledProgram:
-    order = _topo_group_order(g, combo)
-    fns = []
-    for im in order:
-        if backend == "jnp":
-            fn = _group_dense_fn(im.fusion)
-        elif backend == "pallas":
-            fn = _group_pallas_fn(g, im, interpret=interpret)
-        else:
-            raise ValueError(f"unknown backend {backend}")
-        fns.append(jax.jit(fn) if jit else fn)
-    return CompiledProgram(graph=g, combination=combo, group_fns=fns,
-                           group_order=order)
+                        interpret: bool = True, jit: bool = True,
+                        hw: HardwareModel = V5E) -> CompiledProgram:
+    plan = build_plan(g, combo, backend=backend)
+    return compile_plan(g, plan, hw=hw, interpret=interpret, jit=jit)

@@ -7,16 +7,28 @@ Typical use::
     prog = cc.compile(script, {"A": (4096, 4096), "p": (4096,), "r": (4096,)})
     q, s = prog(A=A, p=p, r=r)
 
-``compile`` runs the three paper stages: parse/trace, optimization-space
-generation + search, code generation.
+``compile`` runs the pipeline stages (DESIGN.md §1): parse/trace,
+optimization-space generation + combination search, plan construction,
+code generation — with two cache layers short-circuiting repeat work:
+
+* a **program cache** hit (same script/shapes/dtype/backend/mode in this
+  process) returns the finished ``CompiledProgram`` — no re-trace, no
+  re-search, no re-codegen;
+* a **plan cache** hit (same traced graph, possibly from disk across
+  processes) skips space generation and search, the expensive stages.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Callable, Sequence
 
+import numpy as np
+
 from . import codegen, graph, scheduler
+from .cache import PlanCache, default_cache
+from .plan import build_plan, graph_signature
 from .predictor import V5E, HardwareModel
 from .scheduler import Combination, OptimizationSpace
 
@@ -39,19 +51,90 @@ class CompileReport:
 
 class FusionCompiler:
     def __init__(self, hw: HardwareModel = V5E, backend: str = "jnp",
-                 interpret: bool = True, max_impls_per_fusion: int = 64):
+                 interpret: bool = True, max_impls_per_fusion: int = 64,
+                 dtype=np.float32,
+                 cache: PlanCache | bool | None = True):
         self.hw = hw
         self.backend = backend
         self.interpret = interpret
         self.max_impls = max_impls_per_fusion
+        self.dtype = np.dtype(dtype)
+        if cache is True:
+            self.cache: PlanCache | None = default_cache()
+        else:
+            self.cache = cache or None
 
     # -- stages ------------------------------------------------------------
     def trace(self, script: Callable, input_shapes: dict[str, Sequence[int]]
               ) -> graph.Graph:
-        return graph.trace(script, input_shapes)
+        return graph.trace(script, input_shapes, dtype=self.dtype)
 
     def space(self, g: graph.Graph) -> OptimizationSpace:
         return scheduler.build_space(g, self.hw, self.max_impls)
+
+    def search(self, space: OptimizationSpace, mode) -> Combination:
+        if mode == "best":
+            return scheduler.best_combination(space)
+        if mode == "unfused":
+            return scheduler.unfused_combination(space)
+        if isinstance(mode, int):
+            combos = scheduler.enumerate_combinations(space, limit=mode + 1)
+            return combos[min(mode, len(combos) - 1)]
+        raise ValueError(f"bad mode {mode!r}")
+
+    # -- cache keys --------------------------------------------------------
+    def _config_key(self, backend: str, mode) -> str:
+        # full hw repr, not just .name: custom models keep the default name
+        return repr((backend, mode, self.hw, self.interpret,
+                     self.max_impls))
+
+    @staticmethod
+    def _cell_fingerprint(val) -> tuple | None:
+        """Stable content fingerprint of one closure cell, or None when
+        the value has no address-free identity (default object reprs
+        embed a reusable memory address; large ndarray reprs elide)."""
+        code = getattr(val, "__code__", None)
+        if code is not None:
+            return ("fn", code.co_code, repr(code.co_names))
+        if isinstance(val, np.ndarray):
+            return ("arr", val.shape, str(val.dtype),
+                    hashlib.sha256(np.ascontiguousarray(val).tobytes())
+                    .hexdigest())
+        if isinstance(val, (int, float, complex, str, bytes, bool,
+                            type(None))):
+            return ("lit", repr(val))
+        r = repr(val)
+        return None if " at 0x" in r else ("repr", r)
+
+    def _program_key(self, script: Callable,
+                     input_shapes: dict[str, Sequence[int]],
+                     backend: str, mode) -> str | None:
+        """Pre-trace content address of a compile request, or None when
+        the script is not safely addressable (a closure cell without a
+        stable fingerprint) — the caller then skips the program layer
+        and relies on the plan layer, which keys on the actual trace."""
+        code = getattr(script, "__code__", None)
+        if code is not None:
+            consts = tuple(c.co_code if hasattr(c, "co_code") else repr(c)
+                           for c in code.co_consts)
+            ident = (getattr(script, "__module__", ""),
+                     getattr(script, "__qualname__", ""),
+                     code.co_code, repr(consts), repr(code.co_names))
+            cells = getattr(script, "__closure__", None) or ()
+            prints = [self._cell_fingerprint(c.cell_contents) for c in cells]
+            if any(p is None for p in prints):
+                return None
+            ident += (repr(prints),)
+        else:
+            ident = (repr(script),)
+        payload = repr((ident,
+                        sorted((k, tuple(v)) for k, v in input_shapes.items()),
+                        str(self.dtype), self._config_key(backend, mode)))
+        return hashlib.sha256(payload.encode()).hexdigest()
+
+    def _plan_key(self, g: graph.Graph, backend: str, mode) -> str:
+        payload = repr((graph_signature(g), self._config_key(backend, mode)))
+        return hashlib.sha256(payload.encode()).hexdigest()
 
     # -- main entry points ---------------------------------------------------
     def compile(self, script: Callable, input_shapes: dict[str, Sequence[int]],
@@ -59,35 +142,59 @@ class FusionCompiler:
                 report: bool = False):
         """mode: 'best' (predicted-best combination), 'unfused'
         (CUBLAS-style baseline), or an integer rank into the sorted
-        combination list (empirical-search support)."""
+        combination list (empirical-search support).
+
+        ``report=True`` is a diagnostic path: it always runs the full
+        pipeline (no caches) and returns ``(program, CompileReport)``."""
         backend = backend or self.backend
+        if report:
+            return self._compile_report(script, input_shapes, mode, backend)
+
+        cache = self.cache
+        pkey = None
+        if cache is not None:
+            pkey = self._program_key(script, input_shapes, backend, mode)
+            if pkey is not None:
+                prog = cache.get_program(pkey)
+                if prog is not None:
+                    return prog
+
+        g = self.trace(script, input_shapes)
+        plan = None
+        if cache is not None:
+            plan_key = self._plan_key(g, backend, mode)
+            plan = cache.get_plan(plan_key)
+        if plan is None:
+            space = self.space(g)
+            combo = self.search(space, mode)
+            plan = build_plan(g, combo, backend=backend)
+            if cache is not None:
+                cache.put_plan(plan_key, plan)
+        prog = codegen.compile_plan(g, plan, hw=self.hw,
+                                    interpret=self.interpret)
+        if cache is not None and pkey is not None:
+            cache.put_program(pkey, prog)
+        return prog
+
+    def _compile_report(self, script, input_shapes, mode, backend):
         t0 = time.perf_counter()
         g = self.trace(script, input_shapes)
         t1 = time.perf_counter()
         space = self.space(g)
-        if mode == "best":
-            combo = scheduler.best_combination(space)
-        elif mode == "unfused":
-            combo = scheduler.unfused_combination(space)
-        elif isinstance(mode, int):
-            combos = scheduler.enumerate_combinations(space, limit=mode + 1)
-            combo = combos[min(mode, len(combos) - 1)]
-        else:
-            raise ValueError(f"bad mode {mode!r}")
+        combo = self.search(space, mode)
         t2 = time.perf_counter()
-        prog = codegen.compile_combination(
-            g, combo, backend=backend, interpret=self.interpret)
+        plan = build_plan(g, combo, backend=backend)
+        prog = codegen.compile_plan(g, plan, hw=self.hw,
+                                    interpret=self.interpret)
         t3 = time.perf_counter()
-        if report:
-            rep = CompileReport(
-                n_fusions=len(space.fusions), n_impls=space.n_impls,
-                n_combinations=len(scheduler.enumerate_combinations(space,
-                                                                    limit=5000)),
-                t_trace_s=t1 - t0, t_space_s=t2 - t1, t_codegen_s=t3 - t2,
-                best=scheduler.best_combination(space),
-                unfused=scheduler.unfused_combination(space))
-            return prog, rep
-        return prog
+        rep = CompileReport(
+            n_fusions=len(space.fusions), n_impls=space.n_impls,
+            n_combinations=len(scheduler.enumerate_combinations(space,
+                                                                limit=5000)),
+            t_trace_s=t1 - t0, t_space_s=t2 - t1, t_codegen_s=t3 - t2,
+            best=scheduler.best_combination(space),
+            unfused=scheduler.unfused_combination(space))
+        return prog, rep
 
     def compile_all(self, script: Callable,
                     input_shapes: dict[str, Sequence[int]],
@@ -98,7 +205,8 @@ class FusionCompiler:
         space = self.space(g)
         combos = scheduler.enumerate_combinations(space, limit=limit)
         return [(c, codegen.compile_combination(g, c, backend=backend,
-                                                interpret=self.interpret))
+                                                interpret=self.interpret,
+                                                hw=self.hw))
                 for c in combos]
 
     def oracle(self, script: Callable, input_shapes: dict[str, Sequence[int]]

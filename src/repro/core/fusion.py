@@ -213,7 +213,7 @@ def enumerate_fusions(g: Graph, max_size: int = 8) -> list[Fusion]:
             for c in calls:
                 if c in grp:
                     continue
-                cand = tuple(sorted(set(grp) + {c}, key=lambda x: x.idx))
+                cand = tuple(sorted(set(grp) | {c}, key=lambda x: x.idx))
                 key = frozenset(x.idx for x in cand)
                 if key in seen:
                     continue

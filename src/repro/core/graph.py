@@ -151,7 +151,9 @@ class Graph:
         out_shape = tuple(sizes[a] for a in elem.out_axes)
         out_axes_ids = tuple(call_axes[a] for a in elem.out_axes)
         self._counter += 1
-        out = Var(name or f"t{self._counter}", out_shape, np.dtype(np.float32),
+        out_dtype = (np.result_type(*(a.dtype for a in args)) if args
+                     else np.dtype(np.float32))
+        out = Var(name or f"t{self._counter}", out_shape, out_dtype,
                   producer=node)
         out.axis_ids = out_axes_ids
         node.out = out

@@ -128,8 +128,7 @@ def accumulable(v: Var, f: Fusion, g: Graph, order: tuple[int, ...]) -> bool:
 
 
 def cost_impl(f: Fusion, g: Graph, order: tuple[int, ...],
-              blocks: tuple[int, ...], hw: HardwareModel, dtype_bytes: int = 4
-              ) -> Impl:
+              blocks: tuple[int, ...], hw: HardwareModel) -> Impl:
     sizes = dict(zip(f.axis_roots, f.axis_sizes))
     grid = tuple(-(-sizes[a] // b) for a, b in zip(order, blocks))
     blk = dict(zip(order, blocks))
@@ -151,11 +150,11 @@ def cost_impl(f: Fusion, g: Graph, order: tuple[int, ...],
 
     # ---- VMEM footprint (double-buffered blocks) ---------------------------
     def block_bytes(v: Var) -> float:
-        n = dtype_bytes
+        n = v.dtype.itemsize
         for a in v.axis_ids:
             r = g.axis_root(a)
             n *= blk.get(r, 1)
-        return max(n, dtype_bytes * hw.min_tile[0] * hw.min_tile[1])
+        return max(n, v.dtype.itemsize * hw.min_tile[0] * hw.min_tile[1])
 
     vmem = 0.0
     for v in f.external_inputs:

@@ -2,9 +2,28 @@
 
 A *combination of fusion implementations* is a partition of the call DAG
 into legal fusions (each with a chosen implementation) covering every
-call exactly once.  We search the partition lattice exactly (scripts are
-small) with a branch-and-bound over bitmasks, and can enumerate the
-k-best combinations for the empirical-search mode (paper Table 4/5).
+call exactly once.  The seed searched the partition lattice by exhaustive
+DFS; that is exponential in the number of partitions and dies on graphs
+past a dozen calls.  This module replaces it with a layered search that
+scales (DESIGN.md §3):
+
+* ``best_combination`` — memoized dynamic program over *covered-call
+  bitmasks*.  Extending always the lowest uncovered call makes the
+  partition lattice a DAG on masks; the optimal completion cost of a mask
+  is independent of how it was reached, so the DP is exact while visiting
+  each reachable mask once.  Exact for ``n <= exact_threshold`` (default
+  20); above that a level-synchronous beam over popcount levels bounds
+  work (width configurable), trading exactness for scale.
+* ``enumerate_combinations`` — lazy k-best enumeration: an A* search over
+  (mask, impl-assignment) states whose heuristic is the DP's exact
+  completion cost, with lazy sibling expansion over per-fusion
+  implementation variants (the paper's Table 4/5 empirical-search mode).
+  Combinations stream out in exactly nondecreasing ``t_pred`` order, so
+  asking for the k best does O(k·branch) work instead of materialising
+  the whole space.
+
+``exhaustive_best_combination`` keeps the seed's DFS as a reference
+implementation for equivalence tests.
 """
 from __future__ import annotations
 
@@ -15,6 +34,13 @@ import itertools
 from .fusion import Fusion, enumerate_fusions
 from .graph import Graph
 from .predictor import V5E, HardwareModel, Impl, enumerate_impls
+
+#: graphs up to this many calls are searched exactly; above, beam-pruned.
+EXACT_THRESHOLD = 20
+#: beam width (masks kept per popcount level) for large graphs.
+BEAM_WIDTH = 512
+#: safety cap on enumeration when ``limit`` is None.
+ENUMERATE_CAP = 100_000
 
 
 @dataclasses.dataclass
@@ -52,6 +78,255 @@ def build_space(g: Graph, hw: HardwareModel = V5E, max_impls_per_fusion: int = 6
     return OptimizationSpace(graph=g, fusions=fusions, impls_by_fusion=impls)
 
 
+# ---------------------------------------------------------------------------
+# search index: fusions as bitmasks, grouped by their lowest call
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _SearchIndex:
+    n: int
+    full: int                                   # (1 << n) - 1
+    # lowest call idx -> [(mask, fusion, best impl t_pred)]
+    by_lowest: dict[int, list[tuple[int, Fusion, float]]]
+
+
+def _index(space: OptimizationSpace) -> _SearchIndex:
+    n = len(space.graph.calls)
+    by_lowest: dict[int, list[tuple[int, Fusion, float]]] = {}
+    for f in space.fusions:
+        mask = 0
+        for i in f.key:
+            mask |= 1 << i
+        best_t = space.impls_by_fusion[f.key][0].t_pred
+        by_lowest.setdefault(min(f.key), []).append((mask, f, best_t))
+    return _SearchIndex(n=n, full=(1 << n) - 1, by_lowest=by_lowest)
+
+
+def _lowest_uncovered(mask: int, n: int) -> int:
+    # index of the lowest zero bit below n (mask != full)
+    inv = ~mask & ((1 << n) - 1)
+    return (inv & -inv).bit_length() - 1
+
+
+# ---------------------------------------------------------------------------
+# exact DP over covered-call bitmasks
+# ---------------------------------------------------------------------------
+
+def _dp_completion(space: OptimizationSpace, idx: _SearchIndex
+                   ) -> dict[int, tuple[float, Fusion | None]]:
+    """mask -> (min cost to cover the rest, first fusion of an optimal
+    completion).  Computed over exactly the masks reachable from 0 by
+    always extending the lowest uncovered call — each visited once."""
+    memo: dict[int, tuple[float, Fusion | None]] = {idx.full: (0.0, None)}
+    INF = float("inf")
+
+    def solve(mask: int) -> tuple[float, Fusion | None]:
+        hit = memo.get(mask)
+        if hit is not None:
+            return hit
+        # iterative DFS to avoid Python recursion limits on deep graphs
+        stack = [mask]
+        while stack:
+            m = stack[-1]
+            if m in memo:
+                stack.pop()
+                continue
+            lowest = _lowest_uncovered(m, idx.n)
+            pending = False
+            best, best_f = INF, None
+            for fmask, f, t in idx.by_lowest.get(lowest, []):
+                if fmask & m:
+                    continue
+                child = m | fmask
+                got = memo.get(child)
+                if got is None:
+                    stack.append(child)
+                    pending = True
+                elif t + got[0] < best:
+                    best, best_f = t + got[0], f
+            if not pending:
+                memo[m] = (best, best_f)
+                stack.pop()
+        return memo[mask]
+
+    solve(0)
+    return memo
+
+
+def _reconstruct(space: OptimizationSpace, idx: _SearchIndex,
+                 memo: dict[int, tuple[float, Fusion | None]]) -> Combination:
+    mask, impls = 0, []
+    while mask != idx.full:
+        _, f = memo[mask]
+        assert f is not None, "no legal combination covers the graph"
+        impls.append(space.impls_by_fusion[f.key][0])
+        for i in f.key:
+            mask |= 1 << i
+    return Combination(impls=tuple(impls),
+                       t_pred=sum(i.t_pred for i in impls))
+
+
+# ---------------------------------------------------------------------------
+# beam search (large graphs)
+# ---------------------------------------------------------------------------
+
+def _beam_best(space: OptimizationSpace, idx: _SearchIndex,
+               width: int) -> Combination:
+    """Forward beam over popcount levels: keep the ``width`` cheapest
+    masks per number-of-covered-calls, always extending the lowest
+    uncovered call.  Approximate but covers every call by construction."""
+    # mask -> (cost, parent mask, fusion used to get here)
+    levels: list[dict[int, tuple[float, int, Fusion | None]]] = [
+        {} for _ in range(idx.n + 1)]
+    levels[0][0] = (0.0, -1, None)
+    best_final: tuple[float, int] | None = None
+    for depth in range(idx.n):
+        frontier = levels[depth]
+        if not frontier:
+            continue
+        kept = heapq.nsmallest(width, frontier.items(), key=lambda kv: kv[1][0])
+        for mask, (cost, _, _) in kept:
+            lowest = _lowest_uncovered(mask, idx.n)
+            for fmask, f, t in idx.by_lowest.get(lowest, []):
+                if fmask & mask:
+                    continue
+                child = mask | fmask
+                ncost = cost + t
+                lvl = levels[bin(child).count("1")]
+                old = lvl.get(child)
+                if old is None or ncost < old[0]:
+                    lvl[child] = (ncost, mask, f)
+                if child == idx.full and (best_final is None
+                                          or ncost < best_final[0]):
+                    best_final = (ncost, mask)
+    assert best_final is not None, "no legal combination covers the graph"
+    # walk parents back from the full mask
+    chain: list[Fusion] = []
+    mask = idx.full
+    while mask:
+        cost, parent, f = levels[bin(mask).count("1")][mask]
+        assert f is not None
+        chain.append(f)
+        mask = parent
+    chain.reverse()
+    impls = tuple(space.impls_by_fusion[f.key][0] for f in chain)
+    return Combination(impls=impls, t_pred=sum(i.t_pred for i in impls))
+
+
+# ---------------------------------------------------------------------------
+# public search API
+# ---------------------------------------------------------------------------
+
+def best_combination(space: OptimizationSpace,
+                     exact_threshold: int = EXACT_THRESHOLD,
+                     beam_width: int = BEAM_WIDTH) -> Combination:
+    """Minimum-``t_pred`` combination.  Exact DP for graphs up to
+    ``exact_threshold`` calls, beam search beyond."""
+    idx = _index(space)
+    if idx.n == 0:
+        return Combination(impls=(), t_pred=0.0)
+    if idx.n <= exact_threshold:
+        memo = _dp_completion(space, idx)
+        assert memo[0][0] != float("inf"), \
+            "no legal combination covers the graph"
+        return _reconstruct(space, idx, memo)
+    return _beam_best(space, idx, beam_width)
+
+
+@dataclasses.dataclass(order=True)
+class _State:
+    priority: float
+    g_cost: float
+    order: int                       # tiebreak: insertion counter
+    mask: int = dataclasses.field(compare=False)
+    impls: tuple[Impl, ...] = dataclasses.field(compare=False)
+    # lazy-sibling bookkeeping: the last fusion's impl list + chosen index
+    last_impls: list[Impl] | None = dataclasses.field(compare=False)
+    last_idx: int = dataclasses.field(compare=False)
+
+
+def iter_combinations(space: OptimizationSpace,
+                      exact_threshold: int = EXACT_THRESHOLD):
+    """Yield combinations lazily in nondecreasing ``t_pred`` order.
+
+    A* over (mask, impl-assignment) states.  The heuristic is the exact
+    DP completion cost (using each fusion's best implementation), which
+    is an admissible and consistent lower bound, so states pop in true
+    total-cost order.  Implementation variants within a fusion are
+    explored by lazy sibling expansion (push index ``i+1`` only when
+    index ``i`` pops), exactly the seed's per-partition heap but global.
+    """
+    idx = _index(space)
+    if idx.n == 0:
+        yield Combination(impls=(), t_pred=0.0)
+        return
+    if idx.n <= exact_threshold:
+        memo = _dp_completion(space, idx)
+        if memo[0][0] == float("inf"):
+            return
+
+        def h(mask: int) -> float:
+            got = memo.get(mask)
+            return got[0] if got is not None else float("inf")
+    else:                          # beam regime: uniform-cost (h = 0),
+        def h(mask: int) -> float:  # still exact order, explores more
+            return 0.0
+
+    counter = itertools.count()
+    heap: list[_State] = []
+
+    def push(g_cost: float, mask: int, impls: tuple[Impl, ...],
+             last_impls: list[Impl] | None, last_idx: int):
+        hm = h(mask)
+        if hm == float("inf"):
+            return
+        heapq.heappush(heap, _State(
+            priority=g_cost + hm, g_cost=g_cost, order=next(counter),
+            mask=mask, impls=impls, last_impls=last_impls, last_idx=last_idx))
+
+    def extend(st: _State):
+        lowest = _lowest_uncovered(st.mask, idx.n)
+        for fmask, f, _ in idx.by_lowest.get(lowest, []):
+            if fmask & st.mask:
+                continue
+            il = space.impls_by_fusion[f.key]
+            push(st.g_cost + il[0].t_pred, st.mask | fmask,
+                 st.impls + (il[0],), il, 0)
+
+    push(0.0, 0, (), None, -1)
+    while heap:
+        st = heapq.heappop(heap)
+        # lazy sibling: same prefix, next implementation of the last fusion
+        if st.last_impls is not None and st.last_idx + 1 < len(st.last_impls):
+            nxt = st.last_impls[st.last_idx + 1]
+            dt = nxt.t_pred - st.last_impls[st.last_idx].t_pred
+            push(st.g_cost + dt, st.mask, st.impls[:-1] + (nxt,),
+                 st.last_impls, st.last_idx + 1)
+        if st.mask == idx.full:
+            yield Combination(impls=st.impls, t_pred=st.g_cost)
+        else:
+            extend(st)
+
+
+def enumerate_combinations(space: OptimizationSpace, limit: int | None = None
+                           ) -> list[Combination]:
+    """The ``limit`` best combinations, sorted by predicted time."""
+    cap = limit if limit is not None else ENUMERATE_CAP
+    return list(itertools.islice(iter_combinations(space), cap))
+
+
+def unfused_combination(space: OptimizationSpace) -> Combination:
+    """The no-fusion baseline: every call its own kernel (CUBLAS-style)."""
+    singles = {min(f.key): f for f in space.fusions if len(f.key) == 1}
+    impls = tuple(space.impls_by_fusion[singles[i].key][0]
+                  for i in range(len(space.graph.calls)))
+    return Combination(impls=impls, t_pred=sum(i.t_pred for i in impls))
+
+
+# ---------------------------------------------------------------------------
+# seed reference implementation (kept for equivalence testing)
+# ---------------------------------------------------------------------------
+
 def _partitions(space: OptimizationSpace):
     """Yield all partitions of the call set into legal fusions (as tuples
     of Fusion).  DFS always extends the lowest-index uncovered call."""
@@ -73,46 +348,8 @@ def _partitions(space: OptimizationSpace):
     yield from rec(frozenset(), ())
 
 
-def enumerate_combinations(space: OptimizationSpace, limit: int | None = None
-                           ) -> list[Combination]:
-    """All combinations, sorted by predicted time (best first).
-
-    Within each partition, per-fusion implementations multiply; to keep
-    the space the same magnitude as the paper's (Table 4 reports products
-    of per-fusion variants), we expand the cross-product lazily in
-    predicted-time order and stop at ``limit``.
-    """
-    combos: list[Combination] = []
-    for part in _partitions(space):
-        impl_lists = [space.impls_by_fusion[f.key] for f in part]
-        # lazily expand cross product best-first with a heap
-        heap: list[tuple[float, tuple[int, ...]]] = []
-        start = tuple(0 for _ in impl_lists)
-        t0 = sum(il[0].t_pred for il in impl_lists)
-        heap = [(t0, start)]
-        seen = {start}
-        expanded = 0
-        cap = limit or 10_000
-        while heap and expanded < cap:
-            t, idxs = heapq.heappop(heap)
-            combos.append(Combination(
-                impls=tuple(il[i] for il, i in zip(impl_lists, idxs)), t_pred=t))
-            expanded += 1
-            for k in range(len(impl_lists)):
-                if idxs[k] + 1 < len(impl_lists[k]):
-                    nxt = idxs[:k] + (idxs[k] + 1,) + idxs[k + 1:]
-                    if nxt not in seen:
-                        seen.add(nxt)
-                        dt = (impl_lists[k][idxs[k] + 1].t_pred
-                              - impl_lists[k][idxs[k]].t_pred)
-                        heapq.heappush(heap, (t + dt, nxt))
-    combos.sort(key=lambda c: c.t_pred)
-    if limit is not None:
-        combos = combos[:limit]
-    return combos
-
-
-def best_combination(space: OptimizationSpace) -> Combination:
+def exhaustive_best_combination(space: OptimizationSpace) -> Combination:
+    """The seed's exponential DFS — reference oracle for the DP."""
     best: Combination | None = None
     for part in _partitions(space):
         impls = tuple(space.impls_by_fusion[f.key][0] for f in part)
@@ -121,11 +358,3 @@ def best_combination(space: OptimizationSpace) -> Combination:
             best = Combination(impls=impls, t_pred=t)
     assert best is not None, "no legal combination covers the graph"
     return best
-
-
-def unfused_combination(space: OptimizationSpace) -> Combination:
-    """The no-fusion baseline: every call its own kernel (CUBLAS-style)."""
-    singles = {min(f.key): f for f in space.fusions if len(f.key) == 1}
-    impls = tuple(space.impls_by_fusion[singles[i].key][0]
-                  for i in range(len(space.graph.calls)))
-    return Combination(impls=impls, t_pred=sum(i.t_pred for i in impls))

@@ -3,6 +3,14 @@ token generation (greedy), KV cache managed on-mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke \
         --batch 4 --prompt-len 32 --gen 32
+
+BLAS-sequence serving (the fusion compiler's steady-state path): compile
+a paper sequence once through the plan cache, then serve a request loop
+where every request is ONE dispatch of the jitted whole-program
+function.
+
+    PYTHONPATH=src python -m repro.launch.serve --blas GEMVER \
+        --requests 200 --n 1024
 """
 from __future__ import annotations
 
@@ -13,16 +21,60 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import models
-from repro.configs import get_config, smoke_config
-from repro.dist import sharding
-from repro.launch.mesh import make_host_mesh
-from repro.train import steps as steps_lib
+
+def serve_blas(args) -> dict:
+    """Request loop over one compiled BLAS sequence.
+
+    Demonstrates the serving contract of the plan pipeline: compile #1
+    populates the plan cache, compile #2 (a restarted worker in the same
+    process) is served from it, and each request dispatches exactly one
+    jitted call."""
+    from repro.blas import REGISTRY, make_inputs
+    from repro.core import FusionCompiler, PlanCache
+
+    if args.blas not in REGISTRY:
+        raise SystemExit(f"unknown sequence {args.blas!r}; "
+                         f"choose from {', '.join(REGISTRY)}")
+    seq = REGISTRY[args.blas]
+    cache = PlanCache()
+    cc = FusionCompiler(cache=cache)
+
+    t0 = time.perf_counter()
+    prog = cc.compile(seq.script, seq.shapes(args.n))
+    t_compile = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    cc.compile(seq.script, seq.shapes(args.n))   # warm worker: cache hit
+    t_recompile = time.perf_counter() - t0
+
+    inputs = make_inputs(seq, args.n, seed=args.seed)
+    out = prog(**inputs)
+    prog.block_until_ready(out)                  # warmup jit
+
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        out = prog(**inputs)
+    prog.block_until_ready(out)
+    t_serve = time.perf_counter() - t0
+
+    us_per_req = t_serve / max(args.requests, 1) * 1e6
+    stats = cache.stats.as_dict()
+    print(f"serve {args.blas} n={args.n}: compile {t_compile*1e3:.1f} ms, "
+          f"recompile {t_recompile*1e6:.0f} us (cache hit), "
+          f"{args.requests} requests at {us_per_req:.1f} us/req "
+          f"({prog.n_groups} kernels, 1 dispatch/req)")
+    print(f"cache stats: {stats}")
+    return {"t_compile_s": t_compile, "t_recompile_s": t_recompile,
+            "us_per_request": us_per_req, "n_groups": prog.n_groups,
+            "cache": stats}
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
+    ap.add_argument("--blas", help="serve a BLAS sequence (e.g. GEMVER) "
+                    "through the fusion compiler instead of an LM")
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--n", type=int, default=1024)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -30,6 +82,16 @@ def main(argv=None):
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.blas:
+        return serve_blas(args)
+    if not args.arch:
+        ap.error("one of --arch or --blas is required")
+
+    from repro import models
+    from repro.configs import get_config, smoke_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.train import steps as steps_lib
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh(args.model_parallel)

@@ -3,6 +3,10 @@ semantics for arbitrary random map/reduce scripts and combination
 choices; numeric invariants of the quantizer and predictor."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (pip install repro[dev])")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
