@@ -51,7 +51,16 @@ def main() -> None:
         })
     if args.emit_json:
         with open(args.emit_json, "w") as f:
-            json.dump({"n": n, "iters": iters, "sequences": bench_rows}, f,
+            json.dump({"n": n, "iters": iters,
+                       "note": "speedup_measured is XLA-on-CPU wall time "
+                               "(interleaved A/B batches, min-of-batches); "
+                               "sub-millisecond sequences (AXPYDOT, SSCAL, "
+                               "VADD, WAXPBY) are dispatch-overhead bound "
+                               "and still jitter ±2x on this shared "
+                               "container — compare trends, and trust "
+                               "traffic_ratio/speedup_predicted for the "
+                               "architecture-independent signal",
+                       "sequences": bench_rows}, f,
                       indent=1)
         print(f"BENCH_json,{len(bench_rows)},written:{args.emit_json}",
               file=sys.stderr)

@@ -1,0 +1,146 @@
+"""Serving-engine benchmark: batched ServingEngine (shape buckets + vmap
+horizontal fusion, DESIGN.md §6) vs the PR 1 one-request-per-dispatch
+loop on the same mixed-size workload.  Writes ``BENCH_serving.json``.
+
+    PYTHONPATH=src python -m benchmarks.serving [--quick] [--emit-json [PATH]]
+
+Both paths are fully warmed (plans compiled, jits traced) before timing,
+and both dispatch asynchronously with one final block — what's measured
+is the steady-state serving difference: one dispatch per *batch* vs one
+dispatch per *request*, padding overhead included on the engine side.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+SIZES = (256, 1000, 1024, 2048)
+SEQUENCES = ("AXPYDOT", "VADD", "WAXPBY", "SSCAL")
+
+
+def build_workload(sequences, sizes, n_requests, seed=0):
+    from repro.blas import REGISTRY, make_inputs
+    workload = []
+    for i in range(n_requests):
+        name = sequences[i % len(sequences)]
+        n = sizes[(i // len(sequences)) % len(sizes)]
+        workload.append((name, n, make_inputs(REGISTRY[name], n, seed=seed + i)))
+    return workload
+
+
+def run_engine(workload, sequences, sizes, max_batch=8) -> dict:
+    from repro.serving import ServingEngine
+    engine = ServingEngine(max_batch=max_batch, min_bucket=min(sizes))
+    t0 = time.perf_counter()
+    for name in sequences:
+        engine.warm(name, sizes)
+    t_warm = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    results = engine.serve(workload)
+    t_serve = time.perf_counter() - t0
+    lat = np.sort([r.latency_s for r in results])
+    stats = engine.stats()
+    return {
+        "throughput_rps": len(results) / t_serve,
+        "t_serve_s": t_serve, "t_warm_s": t_warm,
+        "p50_ms": float(lat[len(lat) // 2]) * 1e3,
+        "p99_ms": float(lat[min(len(lat) - 1, int(len(lat) * 0.99))]) * 1e3,
+        "n_dispatches": stats["n_dispatches"],
+        "batch_occupancy": stats["batch_occupancy"],
+        "n_programs": len(stats["programs"]),
+        "bucket_stats": stats["cache"]["buckets"],
+    }, results
+
+
+def run_baseline(workload) -> dict:
+    """PR 1 serving: one exact-shape compile per (sequence, n), one
+    dispatch per request (async), one final block."""
+    import jax
+    from repro.blas import REGISTRY
+    from repro.core import FusionCompiler
+    cc = FusionCompiler()
+    t0 = time.perf_counter()
+    progs = {}
+    for name, n, inputs in workload:
+        key = (name, n)
+        if key not in progs:
+            seq = REGISTRY[name]
+            progs[key] = cc.compile(seq.script, seq.shapes(n))
+            progs[key].block_until_ready(progs[key](**inputs))  # trace warm
+    t_warm = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    outs = [progs[(name, n)](**inputs) for name, n, inputs in workload]
+    jax.block_until_ready(outs)
+    t_serve = time.perf_counter() - t0
+    return {"throughput_rps": len(workload) / t_serve, "t_serve_s": t_serve,
+            "t_warm_s": t_warm, "n_dispatches": len(workload),
+            "n_programs": len(progs)}
+
+
+def verify(workload, results) -> bool:
+    """Every engine result matches its per-request numpy reference on
+    the unpadded slice (float64 oracle, f32-roundoff tolerance)."""
+    from repro.blas import REGISTRY
+    by_rid = {r.rid: r for r in results}
+    for rid, (name, n, inputs) in enumerate(workload):
+        ref = REGISTRY[name].reference(
+            **{k: np.asarray(v, np.float64) for k, v in inputs.items()})
+        got = by_rid[rid].outputs
+        for o, r in zip(got, ref):
+            if not np.allclose(np.asarray(o, np.float64), r,
+                               rtol=1e-4, atol=1e-4 * max(1.0, np.abs(r).max())):
+                return False
+    return True
+
+
+def run_all(n_requests=128, sizes=SIZES, sequences=SEQUENCES, max_batch=8,
+            seed=0) -> dict:
+    workload = build_workload(sequences, sizes, n_requests, seed)
+    engine, results = run_engine(workload, sequences, sizes, max_batch)
+    baseline = run_baseline(workload)
+    return {
+        "n_requests": n_requests, "sizes": list(sizes),
+        "sequences": list(sequences), "max_batch": max_batch,
+        "verified": verify(workload, results),
+        "engine": engine, "baseline": baseline,
+        "speedup_rps": engine["throughput_rps"] / baseline["throughput_rps"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--emit-json", nargs="?", const="BENCH_serving.json",
+                    default=None, metavar="PATH")
+    args = ap.parse_args()
+    sizes = (64, 100, 128, 256) if args.quick else SIZES
+    # 128 = 4 sequences x 4 sizes x one full max_batch=8 batch each
+    n_requests = args.requests or (32 if args.quick else 128)
+
+    r = run_all(n_requests=n_requests, sizes=sizes, max_batch=args.max_batch)
+    print(f"serving {r['n_requests']} requests, sizes {r['sizes']}, "
+          f"sequences {r['sequences']}, max_batch {r['max_batch']}, "
+          f"verified={r['verified']}")
+    print(f"  engine:   {r['engine']['throughput_rps']:10.1f} req/s  "
+          f"p50 {r['engine']['p50_ms']:.2f} ms  p99 {r['engine']['p99_ms']:.2f} ms  "
+          f"{r['engine']['n_dispatches']} dispatches  "
+          f"occupancy {r['engine']['batch_occupancy']:.2f}")
+    print(f"  baseline: {r['baseline']['throughput_rps']:10.1f} req/s  "
+          f"{r['baseline']['n_dispatches']} dispatches")
+    print(f"  speedup:  {r['speedup_rps']:.2f}x requests/sec")
+    if args.emit_json:
+        with open(args.emit_json, "w") as f:
+            json.dump(r, f, indent=1)
+        print(f"written: {args.emit_json}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
 """repro.core — the paper's contribution: a fusion compiler for
 map/reduce elementary functions (Filipovič et al., 2013)."""
-from .cache import CacheStats, PlanCache, default_cache
+from .cache import BucketStats, CacheStats, PlanCache, default_cache
+from .codegen import BatchedProgram, CompiledProgram
 from .compiler import CompileReport, FusionCompiler
 from .elementary import (ArgSpec, Elementary, Kind, Monoid, make_map,
                          make_nested_map, make_nested_map_reduce, make_reduce)
@@ -14,7 +15,8 @@ from .scheduler import (Combination, OptimizationSpace, best_combination,
                         unfused_combination)
 
 __all__ = [
-    "ArgSpec", "CacheStats", "CallNode", "Combination", "CompileReport",
+    "ArgSpec", "BatchedProgram", "BucketStats", "CacheStats", "CallNode",
+    "Combination", "CompileReport", "CompiledProgram",
     "Elementary", "ExecutionPlan", "Fusion", "FusionCompiler", "Graph",
     "GroupPlan", "HardwareModel", "Impl", "Kind", "Monoid",
     "OptimizationSpace", "PlanCache", "V5E", "Var", "analyse_group",

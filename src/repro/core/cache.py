@@ -32,6 +32,17 @@ _ENV_DIR = "REPRO_PLAN_CACHE_DIR"
 
 
 @dataclasses.dataclass
+class BucketStats:
+    """Per-shape-bucket serving telemetry (one bucket = one compiled
+    batched program, e.g. ``GEMVER/1024``)."""
+
+    hits: int = 0                 # compile requests served from cache
+    misses: int = 0               # compile requests that built the program
+    t_compile_s: float = 0.0      # cumulative miss (compile) latency
+    t_hit_s: float = 0.0          # cumulative hit (lookup) latency
+
+
+@dataclasses.dataclass
 class CacheStats:
     program_hits: int = 0
     program_misses: int = 0
@@ -39,8 +50,18 @@ class CacheStats:
     plan_misses: int = 0
     disk_hits: int = 0
     disk_writes: int = 0
+    buckets: dict[str, BucketStats] = dataclasses.field(default_factory=dict)
 
-    def as_dict(self) -> dict[str, int]:
+    def record_bucket(self, label: str, *, hit: bool, seconds: float = 0.0):
+        b = self.buckets.setdefault(label, BucketStats())
+        if hit:
+            b.hits += 1
+            b.t_hit_s += seconds
+        else:
+            b.misses += 1
+            b.t_compile_s += seconds
+
+    def as_dict(self) -> dict[str, Any]:
         return dataclasses.asdict(self)
 
 

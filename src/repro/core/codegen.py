@@ -226,12 +226,7 @@ class CompiledProgram:
         return len(self.plan.groups)
 
     def __call__(self, **inputs):
-        args = []
-        for name in self.plan.input_names:
-            if name not in inputs:
-                raise KeyError(f"missing input {name}")
-            args.append(inputs[name])
-        outs = self.fn(*args)
+        outs = self.fn(*_gather_args(self.plan, inputs))
         return outs[0] if len(outs) == 1 else outs
 
     def block_until_ready(self, result):
@@ -240,10 +235,59 @@ class CompiledProgram:
             if hasattr(x, "block_until_ready") else x, result)
 
 
+@dataclasses.dataclass
+class BatchedProgram:
+    """vmap-batched executable for one plan: a whole bucket of same-shape
+    requests in ONE dispatch (horizontal fusion across requests).
+
+    Every input carries a leading batch axis — scalars become ``(b,)``
+    vectors — and every output comes back with the same leading axis.
+    The batch size is not baked in; jit re-traces per distinct ``b``, so
+    callers should quantize batch sizes (the serving engine rounds to
+    powers of two up to ``max_batch``)."""
+
+    graph: Graph
+    plan: ExecutionPlan
+    max_batch: int
+    fn: Callable                   # jitted vmapped (*batched_inputs) -> tuple
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.plan.groups)
+
+    def __call__(self, **inputs):
+        outs = self.fn(*_gather_args(self.plan, inputs))
+        return outs[0] if len(outs) == 1 else outs
+
+    def block_until_ready(self, result):
+        return jax.tree_util.tree_map(
+            lambda x: x.block_until_ready()
+            if hasattr(x, "block_until_ready") else x, result)
+
+
+def _gather_args(plan: ExecutionPlan, inputs: dict) -> list:
+    unexpected = sorted(set(inputs) - set(plan.input_names))
+    if unexpected:
+        raise TypeError(
+            f"unexpected inputs {unexpected}; "
+            f"program takes {sorted(plan.input_names)}")
+    args = []
+    for name in plan.input_names:
+        if name not in inputs:
+            raise KeyError(f"missing input {name}")
+        args.append(inputs[name])
+    return args
+
+
 def _program_fn(plan: ExecutionPlan, impls: list[Impl], fns: list[Callable],
-                backend: str) -> Callable:
+                backend: str, barrier: bool = True) -> Callable:
     """The whole program as one pure function, values routed by the
-    plan's index table (plan.GroupPlan.inputs / plan.outputs)."""
+    plan's index table (plan.GroupPlan.inputs / plan.outputs).
+
+    ``barrier=False`` drops the inter-group ``optimization_barrier`` —
+    required under ``vmap`` (the primitive has no batching rule in older
+    jax) and desirable for serving, where XLA fusing across the chosen
+    kernel boundaries is pure upside."""
 
     def read(ref, inputs, group_outs):
         if ref[0] == "input":
@@ -255,7 +299,7 @@ def _program_fn(plan: ExecutionPlan, impls: list[Impl], fns: list[Callable],
         group_outs: list[tuple] = []
         for gp, fn in zip(plan.groups, fns):
             outs = fn(*[read(r, inputs, group_outs) for r in gp.inputs])
-            if backend == "jnp" and len(plan.groups) > 1:
+            if barrier and backend == "jnp" and len(plan.groups) > 1:
                 # kernel boundary: stop XLA fusing across groups
                 outs = jax.lax.optimization_barrier(outs)
             group_outs.append(outs)
@@ -265,10 +309,8 @@ def _program_fn(plan: ExecutionPlan, impls: list[Impl], fns: list[Callable],
     return program
 
 
-def compile_plan(g: Graph, plan: ExecutionPlan, hw: HardwareModel = V5E,
-                 interpret: bool = True, jit: bool = True) -> CompiledProgram:
-    """ExecutionPlan -> executable (one jitted whole-program function)."""
-    impls = plan.bind(g, hw)
+def _group_fns(g: Graph, plan: ExecutionPlan, impls: list[Impl],
+               interpret: bool) -> list[Callable]:
     fns = []
     for im in impls:
         if plan.backend == "jnp":
@@ -277,9 +319,35 @@ def compile_plan(g: Graph, plan: ExecutionPlan, hw: HardwareModel = V5E,
             fns.append(_group_pallas_fn(g, im, interpret=interpret))
         else:
             raise ValueError(f"unknown backend {plan.backend}")
+    return fns
+
+
+def compile_plan(g: Graph, plan: ExecutionPlan, hw: HardwareModel = V5E,
+                 interpret: bool = True, jit: bool = True) -> CompiledProgram:
+    """ExecutionPlan -> executable (one jitted whole-program function)."""
+    impls = plan.bind(g, hw)
+    fns = _group_fns(g, plan, impls, interpret)
     program = _program_fn(plan, impls, fns, plan.backend)
     return CompiledProgram(graph=g, plan=plan, group_impls=impls,
                            fn=jax.jit(program) if jit else program)
+
+
+def compile_plan_batched(g: Graph, plan: ExecutionPlan, max_batch: int = 8,
+                         hw: HardwareModel = V5E, interpret: bool = True,
+                         jit: bool = True) -> BatchedProgram:
+    """ExecutionPlan -> vmap-batched executable (one dispatch per batch).
+
+    The whole-program function is pure and positional, so ``jax.vmap``
+    lifts it to a batch of requests wholesale — the serving engine's
+    horizontal fusion.  Inter-group barriers are dropped (see
+    ``_program_fn``)."""
+    impls = plan.bind(g, hw)
+    fns = _group_fns(g, plan, impls, interpret)
+    program = _program_fn(plan, impls, fns, plan.backend, barrier=False)
+    batched = jax.vmap(program)
+    batched.__name__ = "batched_" + plan.signature[:8]
+    return BatchedProgram(graph=g, plan=plan, max_batch=max_batch,
+                          fn=jax.jit(batched) if jit else batched)
 
 
 def compile_combination(g: Graph, combo: Combination, backend: str = "jnp",

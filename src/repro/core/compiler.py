@@ -79,6 +79,11 @@ class FusionCompiler:
             return scheduler.unfused_combination(space)
         if isinstance(mode, int):
             combos = scheduler.enumerate_combinations(space, limit=mode + 1)
+            if not combos:
+                raise ValueError(
+                    "no legal combination covers the graph (the "
+                    "optimization space enumerated empty — every fusion "
+                    "impl may have been pruned, e.g. by the VMEM budget)")
             return combos[min(mode, len(combos) - 1)]
         raise ValueError(f"bad mode {mode!r}")
 
@@ -174,6 +179,62 @@ class FusionCompiler:
                                     interpret=self.interpret)
         if cache is not None and pkey is not None:
             cache.put_program(pkey, prog)
+        return prog
+
+    def compile_batched(self, script, input_shapes: dict[str, Sequence[int]],
+                        max_batch: int = 8, mode: str = "best",
+                        backend: str | None = None,
+                        bucket: str | None = None) -> codegen.BatchedProgram:
+        """Batched variant of :meth:`compile` for the serving engine:
+        returns a ``BatchedProgram`` whose inputs carry a leading batch
+        axis, executing a whole shape bucket of requests as ONE dispatch.
+
+        The *plan* layer is shared with the unbatched path (same trace,
+        same search, same key), so a bucket that was ever compiled —
+        batched or not, this process or a previous one via the disk
+        layer — never re-searches.  The *program* layer keys the batched
+        wrapper separately.
+
+        ``bucket`` labels this compile in ``cache.stats.buckets`` (the
+        per-bucket hit/latency telemetry); it defaults to the largest
+        input dimension, e.g. ``"1024"``.
+        """
+        backend = backend or self.backend
+        if bucket is None:
+            dims = [d for v in input_shapes.values() for d in v]
+            bucket = str(max(dims)) if dims else "scalar"
+        t0 = time.perf_counter()
+        cache = self.cache
+        pkey = None
+        if cache is not None:
+            pkey = self._program_key(script, input_shapes, backend,
+                                     ("batched", mode, max_batch))
+            if pkey is not None:
+                prog = cache.get_program(pkey)
+                if prog is not None:
+                    cache.stats.record_bucket(
+                        bucket, hit=True, seconds=time.perf_counter() - t0)
+                    return prog
+
+        g = self.trace(script, input_shapes)
+        plan = None
+        if cache is not None:
+            plan_key = self._plan_key(g, backend, mode)
+            plan = cache.get_plan(plan_key)
+        if plan is None:
+            space = self.space(g)
+            combo = self.search(space, mode)
+            plan = build_plan(g, combo, backend=backend)
+            if cache is not None:
+                cache.put_plan(plan_key, plan)
+        prog = codegen.compile_plan_batched(g, plan, max_batch=max_batch,
+                                            hw=self.hw,
+                                            interpret=self.interpret)
+        if cache is not None:
+            if pkey is not None:
+                cache.put_program(pkey, prog)
+            cache.stats.record_bucket(
+                bucket, hit=False, seconds=time.perf_counter() - t0)
         return prog
 
     def _compile_report(self, script, input_shapes, mode, backend):

@@ -318,9 +318,21 @@ def enumerate_combinations(space: OptimizationSpace, limit: int | None = None
 def unfused_combination(space: OptimizationSpace) -> Combination:
     """The no-fusion baseline: every call its own kernel (CUBLAS-style)."""
     singles = {min(f.key): f for f in space.fusions if len(f.key) == 1}
-    impls = tuple(space.impls_by_fusion[singles[i].key][0]
-                  for i in range(len(space.graph.calls)))
-    return Combination(impls=impls, t_pred=sum(i.t_pred for i in impls))
+    impls = []
+    for i, call in enumerate(space.graph.calls):
+        f = singles.get(i)
+        if f is None:
+            # build_space drops a singleton when every impl is pruned
+            # (e.g. all exceed the VMEM budget) — name the call instead
+            # of leaking a bare KeyError
+            raise ValueError(
+                f"no single-call implementation for call #{i} "
+                f"({call.elem.name}, axes {call.axis_sizes}): every "
+                f"impl was pruned from the optimization space, so the "
+                f"unfused baseline cannot be built")
+        impls.append(space.impls_by_fusion[f.key][0])
+    return Combination(impls=tuple(impls),
+                       t_pred=sum(i.t_pred for i in impls))
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,14 @@ function.
 
     PYTHONPATH=src python -m repro.launch.serve --blas GEMVER \
         --requests 200 --n 1024
+
+Batched serving (DESIGN.md §6): ``--engine`` drives a mixed-size
+synthetic open-loop workload through the ``ServingEngine`` — power-of-two
+shape buckets, reduction-safe padding, one vmap dispatch per batch —
+reporting throughput and p50/p99 latency.
+
+    PYTHONPATH=src python -m repro.launch.serve --blas GEMVER --engine \
+        --requests 64 --sizes 256,1000,1024,2048 --rate 200
 """
 from __future__ import annotations
 
@@ -68,13 +76,74 @@ def serve_blas(args) -> dict:
             "cache": stats}
 
 
+def serve_engine(args) -> dict:
+    """Mixed-size synthetic workload through the batched ServingEngine."""
+    from repro.blas import REGISTRY, make_inputs
+    from repro.serving import ServingEngine
+
+    names = [s.strip() for s in args.blas.split(",")]
+    for nm in names:
+        if nm not in REGISTRY:
+            raise SystemExit(f"unknown sequence {nm!r}; "
+                             f"choose from {', '.join(REGISTRY)}")
+    if args.sizes:
+        sizes = [int(s) for s in args.sizes.split(",")]
+    else:
+        sizes = [64, 100, 128] if args.quick else [256, 1000, 1024, 2048]
+
+    engine = ServingEngine(max_batch=args.max_batch,
+                           min_bucket=min(64, min(sizes)))
+    t0 = time.perf_counter()
+    buckets = {nm: engine.warm(nm, sizes) for nm in names}
+    t_warm = time.perf_counter() - t0
+
+    workload = []
+    for i in range(args.requests):
+        nm, n = names[i % len(names)], sizes[i % len(sizes)]
+        workload.append((nm, n, make_inputs(REGISTRY[nm], n,
+                                            seed=args.seed + i)))
+
+    t0 = time.perf_counter()
+    results = engine.serve(workload, rate_hz=args.rate or None)
+    t_serve = time.perf_counter() - t0
+
+    lat = np.sort([r.latency_s for r in results])
+    p50 = float(lat[len(lat) // 2]) if len(lat) else 0.0
+    p99 = float(lat[min(len(lat) - 1, int(len(lat) * 0.99))]) if len(lat) else 0.0
+    rps = len(results) / max(t_serve, 1e-9)
+    st = engine.stats()
+    print(f"engine {','.join(names)} sizes={sizes} buckets={buckets}: "
+          f"warm {t_warm*1e3:.1f} ms ({sum(map(len, buckets.values()))} "
+          f"programs), {len(results)} requests in {t_serve*1e3:.1f} ms")
+    print(f"  throughput {rps:.1f} req/s | latency p50 {p50*1e3:.2f} ms "
+          f"p99 {p99*1e3:.2f} ms | {st['n_dispatches']} dispatches, "
+          f"batch occupancy {st['batch_occupancy']:.2f}")
+    print(f"  bucket stats: {st['cache']['buckets']}")
+    return {"throughput_rps": rps, "p50_s": p50, "p99_s": p99,
+            "t_warm_s": t_warm, "t_serve_s": t_serve,
+            "n_results": len(results), "stats": st}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
-    ap.add_argument("--blas", help="serve a BLAS sequence (e.g. GEMVER) "
-                    "through the fusion compiler instead of an LM")
+    ap.add_argument("--blas", help="serve BLAS sequence(s) (e.g. GEMVER or "
+                    "AXPYDOT,VADD) through the fusion compiler instead of "
+                    "an LM")
+    ap.add_argument("--engine", action="store_true",
+                    help="batched ServingEngine (shape buckets + vmap) "
+                    "over a mixed-size workload")
     ap.add_argument("--requests", type=int, default=100)
     ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--sizes", help="comma-separated request sizes for "
+                    "--engine (default 256,1000,1024,2048; --quick "
+                    "shrinks them)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop arrival rate in req/s for --engine "
+                    "(0 = closed loop)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes for CI smoke")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -84,7 +153,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.blas:
-        return serve_blas(args)
+        return serve_engine(args) if args.engine else serve_blas(args)
     if not args.arch:
         ap.error("one of --arch or --blas is required")
 

@@ -1,0 +1,8 @@
+"""repro.serving — batched serving engine over the fusion compiler:
+shape buckets, reduction-safe padding, vmap horizontal fusion
+(DESIGN.md §6)."""
+from .engine import (Request, RequestResult, ServingEngine, bucket_of,
+                     input_pad_values, pad_to_shape)
+
+__all__ = ["Request", "RequestResult", "ServingEngine", "bucket_of",
+           "input_pad_values", "pad_to_shape"]

@@ -1,0 +1,331 @@
+"""Batched serving engine (DESIGN.md §6).
+
+The paper's fusion win is amortizing memory traffic across *calls* that
+share data; a serving workload offers the same win across *requests*.
+Batching concurrent requests of one sequence is horizontal fusion in the
+sense of Li et al. (PAPERS.md): N requests of the same shape bucket
+execute as ONE dispatch of a ``jax.vmap``-lifted whole-program function.
+
+The engine takes ``(sequence, n, inputs)`` requests off a queue and:
+
+1. **buckets** — rounds ``n`` up to the next power of two (floor
+   ``min_bucket``), so heterogeneous sizes collapse onto a handful of
+   compiled shapes; at most one plan is ever searched per
+   ``(sequence, bucket)`` (the plan cache key), and at most one XLA
+   program per ``(sequence, bucket, batch-size-class)``;
+2. **pads** — fills each input up to the bucket shape with a
+   *reduction-safe* value: the identity of the graph's reduction monoid
+   (0 for SUM, -inf/+inf for MAX/MIN — ``Monoid.identity``), so padded
+   lanes are invisible to the reductions and the unpadded slice of every
+   output is exactly what an unpadded run would produce;
+3. **groups** — same-``(sequence, bucket)`` requests form batches of up
+   to ``max_batch`` (batch sizes rounded to powers of two to bound jit
+   re-traces), executed by a ``BatchedProgram``;
+4. **overlaps** — all batches are dispatched before any result is
+   materialized, so host-side batch assembly of batch *k+1* runs while
+   the device executes batch *k* (JAX async dispatch).
+
+Outputs are sliced back to each request's true ``n`` before delivery.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from ..core import FusionCompiler
+from ..core.codegen import BatchedProgram
+from ..core.elementary import Monoid
+from ..core.graph import Graph
+
+
+# ---------------------------------------------------------------------------
+# shape buckets
+# ---------------------------------------------------------------------------
+
+def bucket_of(n: int, min_bucket: int = 128) -> int:
+    """Next power of two >= n, floored at ``min_bucket``."""
+    if n <= 0:
+        raise ValueError(f"request size must be positive, got {n}")
+    b = min_bucket
+    while b < n:
+        b *= 2
+    return b
+
+
+def _pow2_batch(k: int, max_batch: int) -> int:
+    """Round a batch size up to a power of two, capped at ``max_batch``."""
+    b = 1
+    while b < k:
+        b *= 2
+    return min(b, max_batch)
+
+
+# ---------------------------------------------------------------------------
+# reduction-safe padding
+# ---------------------------------------------------------------------------
+
+def input_pad_values(g: Graph) -> dict[str, float]:
+    """Safe pad value per graph input.
+
+    Padded lanes must be invisible to every reduction that (transitively)
+    consumes them, so inputs are padded with the reduction monoid's
+    identity — see DESIGN.md §6.
+
+    * SUM graphs pad with 0, which is sound through any chain of the
+      library's maps: they are all multilinear in their array arguments
+      (``a*x+y``, ``w-a*v``, ``A@x`` partials, rank-2 updates, ...), so
+      all-zero lanes stay zero on the way into the reduction.
+    * MAX/MIN graphs pad with -inf/+inf, which is NOT preserved by
+      arbitrary maps (``a*x`` with ``a<0`` flips -inf to +inf;
+      ``w - a*v`` on two -inf lanes is NaN), so the identity is only
+      accepted when every reduction reads graph inputs *directly*;
+      map-into-MAX chains need masking, which we don't grow until a
+      workload does.
+    * A graph mixing different monoids has no single safe pad value.
+    """
+    monoids = {c.elem.monoid for c in g.calls if c.elem.is_reduction}
+    if not monoids or monoids == {Monoid.SUM}:
+        return {v.name: 0.0 for v in g.inputs}
+    if len(monoids) > 1:
+        raise ValueError(
+            f"graph mixes reduction monoids "
+            f"{sorted(m.value for m in monoids)}: no single padding "
+            "identity is reduction-safe — mask instead")
+    unsafe = [c for c in g.calls if c.elem.is_reduction
+              and any(not a.is_input for a in c.args)]
+    if unsafe:
+        names = ", ".join(c.elem.name for c in unsafe)
+        raise ValueError(
+            f"non-SUM reduction(s) ({names}) consume computed values: "
+            "-inf/+inf padding is not preserved through maps — mask "
+            "instead")
+    ident = float(next(iter(monoids)).identity)
+    return {v.name: ident for v in g.inputs}
+
+
+def pad_to_shape(x: np.ndarray, shape: Sequence[int], fill: float) -> np.ndarray:
+    """Embed ``x`` at the origin of a ``fill``-initialized ``shape``."""
+    x = np.asarray(x)
+    shape = tuple(shape)
+    if x.shape == shape:
+        return x
+    if x.ndim != len(shape) or any(a > b for a, b in zip(x.shape, shape)):
+        raise ValueError(f"cannot pad {x.shape} to {shape}")
+    out = np.full(shape, fill, dtype=x.dtype)
+    out[tuple(slice(s) for s in x.shape)] = x
+    return out
+
+
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    sequence: str
+    n: int
+    inputs: Mapping[str, Any]
+    t_submit: float = 0.0          # perf_counter at submission
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    sequence: str
+    n: int
+    bucket: int
+    batch_size: int                # real requests in the dispatch
+    outputs: tuple[np.ndarray, ...]  # sliced back to the request's n
+    latency_s: float
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class ServingEngine:
+    def __init__(self, compiler: FusionCompiler | None = None,
+                 max_batch: int = 8, min_bucket: int = 128,
+                 registry: Mapping[str, Any] | None = None):
+        if registry is None:
+            from ..blas import REGISTRY
+            registry = REGISTRY
+        self.compiler = compiler or FusionCompiler()
+        self.max_batch = max_batch
+        self.min_bucket = min_bucket
+        self.registry = registry
+        self._programs: dict[tuple[str, int], BatchedProgram] = {}
+        self._pad_values: dict[tuple[str, int], dict[str, float]] = {}
+        self._queue: list[Request] = []
+        self._rid = 0
+        # engine-side telemetry (compile telemetry lives on cache.stats)
+        self.n_requests = 0
+        self.n_dispatches = 0
+        self.n_padded_rows = 0     # dummy rows added by pow2 rounding
+
+    # -- compilation --------------------------------------------------------
+    def bucket_of(self, n: int) -> int:
+        return bucket_of(n, self.min_bucket)
+
+    def _get_program(self, sequence: str, bucket: int
+                     ) -> tuple[BatchedProgram, dict[str, float]]:
+        key = (sequence, bucket)
+        prog = self._programs.get(key)
+        if prog is None:
+            seq = self.registry[sequence]
+            prog = self.compiler.compile_batched(
+                seq.script, seq.shapes(bucket), max_batch=self.max_batch,
+                bucket=f"{sequence}/{bucket}")
+            # pad analysis can reject the graph — cache only complete pairs
+            self._pad_values[key] = input_pad_values(prog.graph)
+            self._programs[key] = prog
+        return prog, self._pad_values[key]
+
+    def warm(self, sequence: str, ns: Sequence[int],
+             trace_batches: bool = True) -> list[int]:
+        """Pre-compile every bucket the sizes ``ns`` map to; returns the
+        bucket list.  ``trace_batches`` additionally executes a dummy
+        dispatch at every power-of-two batch size up to ``max_batch``,
+        so serving never pays a jit trace either."""
+        buckets = sorted({self.bucket_of(n) for n in ns})
+        for b in buckets:
+            prog, _ = self._get_program(sequence, b)
+            if not trace_batches:
+                continue
+            sizes, bs = {self.max_batch}, 1
+            while bs < self.max_batch:      # the batch-size classes
+                sizes.add(bs)               # _pow2_batch can produce
+                bs *= 2
+            for bs in sorted(sizes):
+                dummy = {v.name: np.zeros((bs,) + v.shape, v.dtype)
+                         for v in prog.graph.inputs}
+                prog.block_until_ready(prog(**dummy))
+        return buckets
+
+    # -- request intake -----------------------------------------------------
+    def submit(self, sequence: str, n: int, inputs: Mapping[str, Any],
+               rid: int | None = None) -> Request:
+        if sequence not in self.registry:
+            raise KeyError(f"unknown sequence {sequence!r}; "
+                           f"choose from {', '.join(self.registry)}")
+        if rid is None:
+            rid = self._rid
+        self._rid = max(self._rid, rid) + 1
+        req = Request(rid=rid, sequence=sequence, n=n, inputs=inputs,
+                      t_submit=time.perf_counter())
+        self._queue.append(req)
+        self.n_requests += 1
+        return req
+
+    # -- execution ----------------------------------------------------------
+    def _assemble(self, chunk: list[Request], sequence: str, bucket: int,
+                  batch: int, pad_vals: dict[str, float]) -> dict[str, np.ndarray]:
+        shapes = self.registry[sequence].shapes(bucket)
+        self.n_padded_rows += batch - len(chunk)
+        out = {}
+        for name, shape in shapes.items():
+            rows = [pad_to_shape(np.asarray(r.inputs[name]), shape,
+                                 pad_vals[name]) for r in chunk]
+            # fill the pow2-rounded batch by repeating row 0: real data,
+            # so no NaN/inf can leak out of speculative lanes
+            rows += [rows[0]] * (batch - len(rows))
+            out[name] = np.stack(rows)
+        return out
+
+    def drain(self) -> list[RequestResult]:
+        """Execute everything queued: group by (sequence, bucket), chunk
+        into batches, dispatch ALL batches (async), then materialize."""
+        queue, self._queue = self._queue, []
+        groups: dict[tuple[str, int], list[Request]] = collections.OrderedDict()
+        for req in queue:
+            groups.setdefault((req.sequence, self.bucket_of(req.n)),
+                              []).append(req)
+
+        # resolve every program before dispatching anything: a compile
+        # failure for one group (e.g. an unpaddable graph) must not drop
+        # the other queued requests
+        try:
+            progs = {key: self._get_program(*key) for key in groups}
+        except Exception:
+            self._queue = queue + self._queue
+            raise
+
+        in_flight = []
+        for (sequence, bucket), reqs in groups.items():
+            prog, pad_vals = progs[(sequence, bucket)]
+            for i in range(0, len(reqs), self.max_batch):
+                chunk = reqs[i:i + self.max_batch]
+                batch = _pow2_batch(len(chunk), self.max_batch)
+                args = self._assemble(chunk, sequence, bucket, batch, pad_vals)
+                outs = prog(**args)          # async dispatch — no block
+                if not isinstance(outs, tuple):
+                    outs = (outs,)
+                self.n_dispatches += 1
+                in_flight.append((sequence, bucket, chunk, batch, outs))
+
+        results: list[RequestResult] = []
+        for sequence, bucket, chunk, batch, outs in in_flight:
+            host = [np.asarray(o) for o in outs]    # blocks until ready
+            t_done = time.perf_counter()
+            for i, req in enumerate(chunk):
+                sliced = tuple(
+                    o[i][tuple(slice(req.n) if d == bucket else slice(None)
+                               for d in o.shape[1:])]
+                    for o in host)
+                results.append(RequestResult(
+                    rid=req.rid, sequence=req.sequence, n=req.n,
+                    bucket=bucket, batch_size=len(chunk), outputs=sliced,
+                    latency_s=t_done - req.t_submit))
+        return results
+
+    def serve(self, requests: Sequence[tuple[str, int, Mapping[str, Any]]],
+              rate_hz: float | None = None) -> list[RequestResult]:
+        """Serve a workload of ``(sequence, n, inputs)`` tuples.
+
+        ``rate_hz=None`` is closed-loop: everything is queued up front
+        and drained in maximal batches.  A rate simulates an open-loop
+        arrival process (one request every ``1/rate_hz`` seconds): the
+        engine batches whatever has arrived each round, so batch sizes —
+        and the latency/throughput trade — follow the offered load.
+        """
+        if rate_hz is None:
+            for sequence, n, inputs in requests:
+                self.submit(sequence, n, inputs)
+            return self.drain()
+
+        results: list[RequestResult] = []
+        t0 = time.perf_counter()
+        for i, (sequence, n, inputs) in enumerate(requests):
+            t_arrival = t0 + i / rate_hz
+            wait = t_arrival - time.perf_counter()
+            if wait > 0:
+                # the arrival gap: drain what's queued (overlapping with
+                # the gap) or idle until the next request lands
+                if self._queue:
+                    results.extend(self.drain())
+                wait = t_arrival - time.perf_counter()
+                if wait > 0:
+                    time.sleep(wait)
+            self.submit(sequence, n, inputs)
+        while self._queue:
+            results.extend(self.drain())
+        return results
+
+    # -- telemetry ----------------------------------------------------------
+    def stats(self) -> dict:
+        cache = self.compiler.cache
+        occupancy = (self.n_requests / (self.n_requests + self.n_padded_rows)
+                     if self.n_requests else 0.0)
+        return {
+            "n_requests": self.n_requests,
+            "n_dispatches": self.n_dispatches,
+            "n_padded_rows": self.n_padded_rows,
+            "batch_occupancy": occupancy,
+            "programs": sorted(f"{s}/{b}" for s, b in self._programs),
+            "cache": cache.stats.as_dict() if cache is not None else None,
+        }

@@ -1,14 +1,26 @@
 """shard_map expert-parallel MoE (P10): numerical equivalence with the
 GSPMD path, replica placement, and gradient flow through all-to-all.
 Runs in a subprocess with 8 forced host devices."""
+import importlib.util
 import json
 import os
 import subprocess
 import sys
 
+import jax
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _unsupported() -> str | None:
+    """Explicit environment guard: skip (not error) when the pieces this
+    test exercises aren't available."""
+    if importlib.util.find_spec("repro.dist") is None:
+        return "repro.dist (expert-parallel layer) not implemented yet"
+    if not hasattr(jax.sharding, "set_mesh"):
+        return f"jax {jax.__version__} lacks jax.sharding.set_mesh (needs >= 0.6)"
+    return None
 
 SCRIPT = r"""
 import os
@@ -55,6 +67,9 @@ print(json.dumps(out))
 
 
 def test_moe_ep_matches_gspmd_and_has_grads():
+    reason = _unsupported()
+    if reason:
+        pytest.skip(reason)
     script = SCRIPT.format(repo=REPO)
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,
                        text=True, timeout=600)

@@ -2,11 +2,13 @@
 driving real BLAS workloads, and the distributed step functions lowering
 with shardings on a multi-device mesh (subprocess: needs forced device
 count before jax init)."""
+import importlib.util
 import json
 import os
 import subprocess
 import sys
 
+import jax
 import numpy as np
 import pytest
 
@@ -14,6 +16,16 @@ from repro.blas import REGISTRY
 from repro.core import FusionCompiler
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _dist_unsupported() -> str | None:
+    """Guard for the distributed subprocess tests: skip (not error) when
+    the pieces they exercise aren't available."""
+    if importlib.util.find_spec("repro.dist") is None:
+        return "repro.dist (sharding layer) not implemented yet"
+    if not hasattr(jax.sharding, "set_mesh"):
+        return f"jax {jax.__version__} lacks jax.sharding.set_mesh (needs >= 0.6)"
+    return None
 
 
 def test_end_to_end_bicg_solver_iteration():
@@ -105,6 +117,9 @@ print(json.dumps({{"ok": True,
 def test_multipod_lowering_smoke(arch, kind):
     """(2,2,2) pod/data/model mesh on 8 host devices: lower+compile the
     real step functions for reduced configs; collectives must appear."""
+    reason = _dist_unsupported()
+    if reason:
+        pytest.skip(reason)
     script = SUBPROC_SCRIPT.format(repo=REPO, arch=arch, kind=kind)
     out = subprocess.run([sys.executable, "-c", script],
                          capture_output=True, text=True, timeout=600)
