@@ -15,6 +15,20 @@ compiler:
   to the fresh trace.  The disk layer survives process restarts: set
   ``REPRO_PLAN_CACHE_DIR`` or pass ``disk_dir``.
 
+The disk layer doubles as the **fleet-shared cache** (DESIGN.md §7):
+point every serving host's ``REPRO_PLAN_CACHE_DIR`` at one shared
+directory and the fleet warms once.  The protocol is lock-free because
+keys are content addresses — two hosts computing the same key computed
+the same plan, so writes are idempotent:
+
+* writers publish with write-to-temp + atomic ``os.replace``, so a
+  reader (or a concurrent writer) never observes a torn file;
+* an existing entry is never rewritten (first writer wins; later
+  warmers skip the I/O);
+* readers treat unreadable/stale entries as misses and recompute;
+* orphaned temp files from crashed writers are garbage-collected
+  opportunistically on the next write.
+
 Both layers are bounded LRU; ``stats`` exposes hit/miss counters so the
 serving path can be monitored.
 """
@@ -24,6 +38,7 @@ import collections
 import dataclasses
 import os
 import tempfile
+import time
 from typing import Any
 
 from .plan import ExecutionPlan
@@ -126,6 +141,13 @@ class PlanCache:
                     plan = ExecutionPlan.from_json(f.read())
             except (OSError, ValueError):
                 plan = None  # stale/corrupt entry: fall through to a miss
+                try:
+                    # drop it so the first-writer-wins put_plan can
+                    # republish — otherwise a bad entry (old plan
+                    # version, disk-full truncation) poisons its key
+                    os.unlink(path)
+                except OSError:
+                    pass
             if plan is not None:
                 self.stats.plan_hits += 1
                 self.stats.disk_hits += 1
@@ -134,18 +156,41 @@ class PlanCache:
         self.stats.plan_misses += 1
         return None
 
+    def _gc_tmp(self, max_age_s: float = 3600.0):
+        """Opportunistically drop temp files orphaned by crashed writers
+        (only ever called on the rare write path)."""
+        try:
+            now = time.time()
+            for name in os.listdir(self.disk_dir):
+                if not name.endswith(".tmp"):
+                    continue
+                p = os.path.join(self.disk_dir, name)
+                try:
+                    if now - os.path.getmtime(p) > max_age_s:
+                        os.unlink(p)
+                except OSError:
+                    pass
+        except OSError:
+            pass
+
     def put_plan(self, key: str, plan: ExecutionPlan):
         self._plans.put(key, plan)
         path = self._disk_path(key)
-        if path:
-            # a broken cache dir degrades to a miss, never fails the compile
+        if path and not os.path.exists(path):
+            # keys are content addresses, so an existing entry IS this
+            # plan: first writer wins, later fleet warmers skip the I/O.
+            # A broken cache dir degrades to a miss, never fails compile.
             tmp = None
             try:
                 os.makedirs(self.disk_dir, exist_ok=True)
-                # atomic write: concurrent compilers never read a torn file
+                self._gc_tmp()
+                # atomic publish: write-to-temp + rename, so concurrent
+                # compilers (other processes/hosts) never read torn files
                 fd, tmp = tempfile.mkstemp(dir=self.disk_dir, suffix=".tmp")
                 with os.fdopen(fd, "w") as f:
                     f.write(plan.to_json())
+                    f.flush()
+                    os.fsync(f.fileno())
                 os.replace(tmp, path)
                 self.stats.disk_writes += 1
             except OSError:

@@ -250,6 +250,8 @@ class BatchedProgram:
     plan: ExecutionPlan
     max_batch: int
     fn: Callable                   # jitted vmapped (*batched_inputs) -> tuple
+    raw_fn: Callable | None = None  # un-jitted vmapped program — what
+    #                                 dist.sharding.shard_program lifts
 
     @property
     def n_groups(self) -> int:
@@ -347,7 +349,8 @@ def compile_plan_batched(g: Graph, plan: ExecutionPlan, max_batch: int = 8,
     batched = jax.vmap(program)
     batched.__name__ = "batched_" + plan.signature[:8]
     return BatchedProgram(graph=g, plan=plan, max_batch=max_batch,
-                          fn=jax.jit(batched) if jit else batched)
+                          fn=jax.jit(batched) if jit else batched,
+                          raw_fn=batched)
 
 
 def compile_combination(g: Graph, combo: Combination, backend: str = "jnp",

@@ -141,16 +141,48 @@ class FusionCompiler:
         payload = repr((graph_signature(g), self._config_key(backend, mode)))
         return hashlib.sha256(payload.encode()).hexdigest()
 
+    @staticmethod
+    def _bucket_label(input_shapes: dict[str, Sequence[int]]) -> str:
+        dims = [d for v in input_shapes.values() for d in v]
+        return str(max(dims)) if dims else "scalar"
+
     # -- main entry points ---------------------------------------------------
     def compile(self, script: Callable, input_shapes: dict[str, Sequence[int]],
                 mode: str = "best", backend: str | None = None,
                 report: bool = False):
-        """mode: 'best' (predicted-best combination), 'unfused'
-        (CUBLAS-style baseline), or an integer rank into the sorted
-        combination list (empirical-search support).
+        """Compile a sequence script into one jitted whole-program
+        function (pipeline stages: DESIGN.md §1; caching: §5).
 
-        ``report=True`` is a diagnostic path: it always runs the full
-        pipeline (no caches) and returns ``(program, CompileReport)``."""
+        Args:
+          script: a sequence script ``(g, **vars) -> outputs`` built
+            from elementary calls (e.g. ``REGISTRY["GEMVER"].script``).
+          input_shapes: ``{input name: shape tuple}`` — the trace is
+            shape-specialized, like the paper's generated CUDA.
+          mode: ``'best'`` (predicted-best combination, bitmask-DP /
+            beam search), ``'unfused'`` (CUBLAS-style one-kernel-per-
+            call baseline), or an integer rank into the ``t_pred``-
+            sorted combination stream (empirical search, paper §5.2).
+          backend: ``'jnp'`` or ``'pallas'`` (defaults to the
+            compiler's).
+          report: diagnostic path — always runs the full pipeline
+            (bypassing both cache layers) and returns
+            ``(program, CompileReport)``.
+
+        Returns:
+          A ``CompiledProgram``; calling it with keyword inputs runs
+          the whole sequence as a single XLA dispatch.
+
+        Raises:
+          ValueError: unknown ``mode``, or an integer mode for which no
+            legal combination covers the graph.
+
+        Example::
+
+            cc = FusionCompiler()
+            prog = cc.compile(REGISTRY["AXPYDOT"].script,
+                              REGISTRY["AXPYDOT"].shapes(1024))
+            z, r = prog(w=w, v=v, u=u, alpha=np.float32(0.3))
+        """
         backend = backend or self.backend
         if report:
             return self._compile_report(script, input_shapes, mode, backend)
@@ -185,24 +217,40 @@ class FusionCompiler:
                         max_batch: int = 8, mode: str = "best",
                         backend: str | None = None,
                         bucket: str | None = None) -> codegen.BatchedProgram:
-        """Batched variant of :meth:`compile` for the serving engine:
-        returns a ``BatchedProgram`` whose inputs carry a leading batch
-        axis, executing a whole shape bucket of requests as ONE dispatch.
+        """Batched variant of :meth:`compile` for the serving engine.
 
-        The *plan* layer is shared with the unbatched path (same trace,
-        same search, same key), so a bucket that was ever compiled —
-        batched or not, this process or a previous one via the disk
-        layer — never re-searches.  The *program* layer keys the batched
-        wrapper separately.
+        Args:
+          script, input_shapes, mode, backend: as :meth:`compile`; the
+            shapes describe ONE request — the returned program adds a
+            leading batch axis to every input and output (scalars
+            become ``(b,)`` vectors), executing a whole shape bucket of
+            requests as ONE dispatch (vmap horizontal fusion,
+            DESIGN.md §6).
+          max_batch: advisory batch-size cap recorded on the program
+            (jit re-traces per distinct batch size; the serving engine
+            quantizes sizes to powers of two up to this).
+          bucket: label for this compile in ``cache.stats.buckets``
+            (per-bucket hit/latency telemetry); defaults to the largest
+            input dimension, e.g. ``"1024"``.
 
-        ``bucket`` labels this compile in ``cache.stats.buckets`` (the
-        per-bucket hit/latency telemetry); it defaults to the largest
-        input dimension, e.g. ``"1024"``.
+        Returns:
+          A ``BatchedProgram``.  The *plan* cache layer is shared with
+          the unbatched path (same trace, same search, same key), so a
+          bucket that was ever compiled — batched or not, this process
+          or a previous one via the disk layer — never re-searches; the
+          *program* layer keys the batched wrapper separately.
+
+        Raises:
+          ValueError: as :meth:`compile`.
+
+        Example::
+
+            prog = cc.compile_batched(seq.script, seq.shapes(1024))
+            z, r = prog(w=W, v=V, u=U, alpha=np.ones(8, np.float32))
+            # W/V/U: (8, 1024); z: (8, 1024); r: (8,)
         """
         backend = backend or self.backend
-        if bucket is None:
-            dims = [d for v in input_shapes.values() for d in v]
-            bucket = str(max(dims)) if dims else "scalar"
+        bucket = bucket or self._bucket_label(input_shapes)
         t0 = time.perf_counter()
         cache = self.cache
         pkey = None
@@ -235,6 +283,69 @@ class FusionCompiler:
                 cache.put_program(pkey, prog)
             cache.stats.record_bucket(
                 bucket, hit=False, seconds=time.perf_counter() - t0)
+        return prog
+
+    def compile_sharded(self, script, input_shapes: dict[str, Sequence[int]],
+                        mesh, axis: str = "data", max_batch: int = 8,
+                        mode: str = "best", backend: str | None = None,
+                        bucket: str | None = None) -> codegen.BatchedProgram:
+        """Sharded variant of :meth:`compile_batched` for multi-device
+        serving (DESIGN.md §7): the vmap-lifted whole-program function
+        is additionally ``shard_map``-lifted over the ``axis`` replicas
+        of ``mesh``, so one global batch executes as contiguous
+        per-replica row blocks with no cross-replica communication.
+
+        Args:
+          script, input_shapes, max_batch, mode, backend, bucket: as
+            :meth:`compile_batched`.
+          mesh: mesh holding the replica axis (``launch.mesh.
+            make_data_mesh()`` for a pure replica mesh).
+          axis: the mesh axis to spread the batch over.
+
+        Returns:
+          A ``BatchedProgram`` whose batch sizes must be multiples of
+          the replica count (``ShardedServingEngine`` quantizes its
+          dispatches to guarantee this).  When ``axis`` has size 1 this
+          is exactly :meth:`compile_batched` (single-device fallback).
+          The plan layer is shared with both other entry points; the
+          program layer keys on the mesh topology as well, so fleets
+          with heterogeneous meshes don't alias programs.
+
+        Raises:
+          ValueError: as :meth:`compile`, or when ``mesh`` lacks
+            ``axis``.
+        """
+        from ..dist.sharding import mesh_axis_sizes, mesh_fingerprint, \
+            shard_program
+
+        backend = backend or self.backend
+        bucket = bucket or self._bucket_label(input_shapes)
+        sizes = mesh_axis_sizes(mesh)
+        if axis not in sizes:
+            raise ValueError(f"mesh {tuple(sizes)} has no {axis!r} axis")
+        if sizes[axis] == 1:
+            return self.compile_batched(script, input_shapes,
+                                        max_batch=max_batch, mode=mode,
+                                        backend=backend, bucket=bucket)
+        t0 = time.perf_counter()
+        cache = self.cache
+        pkey = None
+        if cache is not None:
+            pkey = self._program_key(
+                script, input_shapes, backend,
+                ("sharded", mode, max_batch, axis, mesh_fingerprint(mesh)))
+            if pkey is not None:
+                prog = cache.get_program(pkey)
+                if prog is not None:
+                    cache.stats.record_bucket(
+                        bucket, hit=True, seconds=time.perf_counter() - t0)
+                    return prog
+        base = self.compile_batched(script, input_shapes,
+                                    max_batch=max_batch, mode=mode,
+                                    backend=backend, bucket=bucket)
+        prog = shard_program(base, mesh, axis)
+        if cache is not None and pkey is not None:
+            cache.put_program(pkey, prog)
         return prog
 
     def _compile_report(self, script, input_shapes, mode, backend):

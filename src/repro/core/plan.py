@@ -103,10 +103,33 @@ class ExecutionPlan:
     def bind(self, g: Graph, hw: HardwareModel) -> list[Impl]:
         """Rebuild concrete Impls against a (re-)traced graph.
 
-        The graph must have the signature the plan was computed for; call
-        indices, fusion analysis and axis canonicalization are all
-        deterministic functions of the trace, so the groups reconstruct
-        exactly."""
+        This is how a cached (possibly disk-loaded, possibly
+        another-host-computed) plan turns back into executable form
+        without re-running the search: call indices, fusion analysis
+        and axis canonicalization are all deterministic functions of
+        the trace, so the groups reconstruct exactly.
+
+        Args:
+          g: a graph freshly traced from the same program (verified via
+            ``graph_signature``).
+          hw: the hardware model used to re-cost the implementations
+            (costs are informational at this point — the plan already
+            fixed the grouping and grids).
+
+        Returns:
+          One bound ``Impl`` per plan group, in topological order —
+          what ``codegen.compile_plan`` consumes.
+
+        Raises:
+          ValueError: signature mismatch (the graph is not the plan's
+            trace), or a plan group that is no longer a legal fusion
+            (library semantics changed under a stale cache entry).
+
+        Example::
+
+            plan2 = ExecutionPlan.from_json(plan.to_json())
+            impls = plan2.bind(compiler.trace(script, shapes), V5E)
+        """
         if graph_signature(g) != self.signature:
             raise ValueError("plan/graph signature mismatch")
         impls: list[Impl] = []

@@ -2,3 +2,20 @@
 
 NOTE: do not import ``dryrun`` from library code — it sets XLA_FLAGS for
 512 placeholder devices at import time (by design, per assignment)."""
+import os
+
+
+def force_host_devices(n: int) -> None:
+    """Force ``n`` host CPU devices by appending
+    ``--xla_force_host_platform_device_count`` to ``XLA_FLAGS``.
+
+    Must run before jax initializes — this module is jax-free precisely
+    so CLIs can call it before their first jax import.  A no-op when
+    ``n`` is falsy or the flag is already present."""
+    if not n:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" in flags:
+        return
+    flag = f"--xla_force_host_platform_device_count={n}"
+    os.environ["XLA_FLAGS"] = (flags + " " + flag).strip()

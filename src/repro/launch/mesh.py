@@ -30,6 +30,14 @@ def make_mesh(shape, axes):
     return _mk(tuple(shape), tuple(axes))
 
 
+def make_data_mesh(n_devices: int | None = None):
+    """1-D ``('data',)`` replica mesh over ``n_devices`` (default: all
+    local devices) — what the sharded serving engine spreads request
+    batches over (DESIGN.md §7)."""
+    n = n_devices or len(jax.devices())
+    return _mk((n,), ("data",))
+
+
 def make_host_mesh(model_parallel: int = 1):
     """Best-effort mesh over whatever devices exist (CPU smoke tests,
     degraded/elastic operation after node loss)."""

@@ -19,14 +19,20 @@ reporting throughput and p50/p99 latency.
 
     PYTHONPATH=src python -m repro.launch.serve --blas GEMVER --engine \
         --requests 64 --sizes 256,1000,1024,2048 --rate 200
+
+Sharded serving (DESIGN.md §7): ``--engine --sharded`` spreads every
+dispatch over the ``data`` axis of a replica mesh; ``--devices N``
+forces N host CPU devices (must be set before jax initializes, which is
+why this module imports jax lazily).
+
+    PYTHONPATH=src python -m repro.launch.serve --blas GEMVER --engine \
+        --sharded --devices 8 --requests 64 --quick
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -77,9 +83,10 @@ def serve_blas(args) -> dict:
 
 
 def serve_engine(args) -> dict:
-    """Mixed-size synthetic workload through the batched ServingEngine."""
+    """Mixed-size synthetic workload through the batched ServingEngine
+    (``--sharded``: the mesh-sharded variant)."""
     from repro.blas import REGISTRY, make_inputs
-    from repro.serving import ServingEngine
+    from repro.serving import ServingEngine, ShardedServingEngine
 
     names = [s.strip() for s in args.blas.split(",")]
     for nm in names:
@@ -91,8 +98,14 @@ def serve_engine(args) -> dict:
     else:
         sizes = [64, 100, 128] if args.quick else [256, 1000, 1024, 2048]
 
-    engine = ServingEngine(max_batch=args.max_batch,
-                           min_bucket=min(64, min(sizes)))
+    if args.sharded:
+        engine = ShardedServingEngine(max_batch=args.max_batch,
+                                      min_bucket=min(64, min(sizes)))
+        print(f"sharded engine: {engine.n_replicas} replicas, "
+              f"max_batch {engine.max_batch}")
+    else:
+        engine = ServingEngine(max_batch=args.max_batch,
+                               min_bucket=min(64, min(sizes)))
     t0 = time.perf_counter()
     buckets = {nm: engine.warm(nm, sizes) for nm in names}
     t_warm = time.perf_counter() - t0
@@ -119,6 +132,8 @@ def serve_engine(args) -> dict:
           f"p99 {p99*1e3:.2f} ms | {st['n_dispatches']} dispatches, "
           f"batch occupancy {st['batch_occupancy']:.2f}")
     print(f"  bucket stats: {st['cache']['buckets']}")
+    if args.sharded:
+        print(f"  replica rows: {st['replica_rows']}")
     return {"throughput_rps": rps, "p50_s": p50, "p99_s": p99,
             "t_warm_s": t_warm, "t_serve_s": t_serve,
             "n_results": len(results), "stats": st}
@@ -133,6 +148,12 @@ def main(argv=None):
     ap.add_argument("--engine", action="store_true",
                     help="batched ServingEngine (shape buckets + vmap) "
                     "over a mixed-size workload")
+    ap.add_argument("--sharded", action="store_true",
+                    help="with --engine: shard dispatches over the "
+                    "'data' axis of a replica mesh (DESIGN.md §7)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host CPU devices (sets XLA_FLAGS; "
+                    "must run before jax initializes)")
     ap.add_argument("--requests", type=int, default=100)
     ap.add_argument("--n", type=int, default=1024)
     ap.add_argument("--sizes", help="comma-separated request sizes for "
@@ -152,10 +173,16 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    from repro.launch import force_host_devices
+    force_host_devices(args.devices)
+
     if args.blas:
         return serve_engine(args) if args.engine else serve_blas(args)
     if not args.arch:
         ap.error("one of --arch or --blas is required")
+
+    import jax
+    import jax.numpy as jnp
 
     from repro import models
     from repro.configs import get_config, smoke_config

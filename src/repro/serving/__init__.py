@@ -1,8 +1,11 @@
 """repro.serving — batched serving engine over the fusion compiler:
 shape buckets, reduction-safe padding, vmap horizontal fusion
-(DESIGN.md §6)."""
-from .engine import (Request, RequestResult, ServingEngine, bucket_of,
-                     input_pad_values, pad_to_shape)
+(DESIGN.md §6), and the shard_map-sharded multi-device variant
+(DESIGN.md §7)."""
+from .engine import (Request, RequestResult, ServingEngine,
+                     ShardedServingEngine, bucket_of, input_pad_values,
+                     pad_to_shape, replica_fill)
 
-__all__ = ["Request", "RequestResult", "ServingEngine", "bucket_of",
-           "input_pad_values", "pad_to_shape"]
+__all__ = ["Request", "RequestResult", "ServingEngine",
+           "ShardedServingEngine", "bucket_of", "input_pad_values",
+           "pad_to_shape", "replica_fill"]

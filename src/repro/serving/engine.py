@@ -26,6 +26,10 @@ The engine takes ``(sequence, n, inputs)`` requests off a queue and:
    the device executes batch *k* (JAX async dispatch).
 
 Outputs are sliced back to each request's true ``n`` before delivery.
+
+``ShardedServingEngine`` (DESIGN.md §7) keeps the same pipeline but
+``shard_map``s every dispatch over the ``data`` axis of a device mesh,
+spreading a global batch across replicas as contiguous row blocks.
 """
 from __future__ import annotations
 
@@ -149,6 +153,25 @@ class RequestResult:
 # ---------------------------------------------------------------------------
 
 class ServingEngine:
+    """Single-device batched serving engine (DESIGN.md §6).
+
+    Args:
+      compiler: the ``FusionCompiler`` to build bucket programs with
+        (defaults to a fresh one sharing the process-wide plan cache).
+      max_batch: largest requests-per-dispatch; batch sizes quantize to
+        powers of two up to this, bounding jit re-traces.
+      min_bucket: floor of the power-of-two shape buckets.
+      registry: ``{name: Sequence}`` of servable sequences (defaults to
+        the paper's ``blas.REGISTRY``).
+
+    Example::
+
+        engine = ServingEngine(max_batch=8)
+        engine.warm("GEMVER", [1000, 2048])
+        engine.submit("GEMVER", 1000, inputs)   # any request size
+        (result,) = engine.drain()              # sliced back to n=1000
+    """
+
     def __init__(self, compiler: FusionCompiler | None = None,
                  max_batch: int = 8, min_bucket: int = 128,
                  registry: Mapping[str, Any] | None = None):
@@ -186,22 +209,34 @@ class ServingEngine:
             self._programs[key] = prog
         return prog, self._pad_values[key]
 
+    def _dispatch_batch(self, k: int) -> int:
+        """Quantized dispatch size for ``k`` queued requests."""
+        return _pow2_batch(k, self.max_batch)
+
+    def _trace_sizes(self) -> list[int]:
+        """Every batch-size class ``_dispatch_batch`` can produce."""
+        sizes, bs = {self.max_batch}, 1
+        while bs < self.max_batch:
+            sizes.add(bs)
+            bs *= 2
+        return sorted(sizes)
+
+    def _note_dispatch(self, n_real: int, batch: int) -> None:
+        """Telemetry hook: one dispatch of ``batch`` rows, ``n_real``
+        of them real requests (subclasses track replica routing)."""
+
     def warm(self, sequence: str, ns: Sequence[int],
              trace_batches: bool = True) -> list[int]:
         """Pre-compile every bucket the sizes ``ns`` map to; returns the
         bucket list.  ``trace_batches`` additionally executes a dummy
-        dispatch at every power-of-two batch size up to ``max_batch``,
-        so serving never pays a jit trace either."""
+        dispatch at every batch-size class ``drain`` can produce, so
+        serving never pays a jit trace either."""
         buckets = sorted({self.bucket_of(n) for n in ns})
         for b in buckets:
             prog, _ = self._get_program(sequence, b)
             if not trace_batches:
                 continue
-            sizes, bs = {self.max_batch}, 1
-            while bs < self.max_batch:      # the batch-size classes
-                sizes.add(bs)               # _pow2_batch can produce
-                bs *= 2
-            for bs in sorted(sizes):
+            for bs in self._trace_sizes():
                 dummy = {v.name: np.zeros((bs,) + v.shape, v.dtype)
                          for v in prog.graph.inputs}
                 prog.block_until_ready(prog(**dummy))
@@ -260,12 +295,13 @@ class ServingEngine:
             prog, pad_vals = progs[(sequence, bucket)]
             for i in range(0, len(reqs), self.max_batch):
                 chunk = reqs[i:i + self.max_batch]
-                batch = _pow2_batch(len(chunk), self.max_batch)
+                batch = self._dispatch_batch(len(chunk))
                 args = self._assemble(chunk, sequence, bucket, batch, pad_vals)
                 outs = prog(**args)          # async dispatch — no block
                 if not isinstance(outs, tuple):
                     outs = (outs,)
                 self.n_dispatches += 1
+                self._note_dispatch(len(chunk), batch)
                 in_flight.append((sequence, bucket, chunk, batch, outs))
 
         results: list[RequestResult] = []
@@ -329,3 +365,120 @@ class ServingEngine:
             "programs": sorted(f"{s}/{b}" for s, b in self._programs),
             "cache": cache.stats.as_dict() if cache is not None else None,
         }
+
+
+# ---------------------------------------------------------------------------
+# sharded serving (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def replica_fill(n_real: int, batch: int, n_replicas: int) -> list[int]:
+    """Real rows landing on each replica of a sharded dispatch.
+
+    A dispatch of ``batch`` rows splits into contiguous blocks of
+    ``batch // n_replicas``: replica ``j`` executes rows
+    ``[j*batch/R, (j+1)*batch/R)``.  The first ``n_real`` rows are real
+    requests, the rest padding, so the fill is front-loaded — with an
+    uneven queue (``n_real`` not a multiple of the block) one replica
+    runs partially full and later replicas may run pure padding.
+
+    >>> replica_fill(5, 8, 4)      # 5 requests, 2-row blocks
+    [2, 2, 1, 0]
+    """
+    per = batch // n_replicas
+    return [max(0, min(per, n_real - j * per)) for j in range(n_replicas)]
+
+
+class ShardedServingEngine(ServingEngine):
+    """Multi-device serving: the §6 engine with every dispatch
+    ``shard_map``-spread over the ``data`` axis of a mesh
+    (DESIGN.md §7).
+
+    Same bucketing, padding and batching as ``ServingEngine`` — the
+    differences are (1) programs come from
+    ``FusionCompiler.compile_sharded``, so one global batch executes as
+    contiguous per-replica row blocks with no cross-replica
+    communication, and (2) dispatch sizes quantize to
+    ``n_replicas * 2**i`` so every replica gets an equal block
+    (``replica_fill`` describes the routing; ``stats()['replica_rows']``
+    tracks it).  On a 1-device mesh this degrades to exactly the base
+    engine (same programs, same keys).
+
+    Numerics: per-replica blocks of >= 2 rows produce bitwise-identical
+    results to a single-device dispatch of the same global batch; 1-row
+    blocks make XLA lower batched matmuls differently (correct within
+    f32 roundoff, not bit-identical) — keep ``max_batch >= 2 *
+    n_replicas`` when bit-stability across engine configs matters
+    (tests/test_dist.py pins both properties).
+
+    Args:
+      mesh: mesh with the replica axis (default:
+        ``launch.mesh.make_data_mesh()`` over all local devices).
+      axis: replica axis name (default ``"data"``).
+      compiler, max_batch, min_bucket, registry: as ``ServingEngine``;
+        ``max_batch`` rounds up so it is ``n_replicas`` times a power
+        of two.
+    """
+
+    def __init__(self, mesh=None, *, compiler: FusionCompiler | None = None,
+                 max_batch: int = 8, min_bucket: int = 128,
+                 registry: Mapping[str, Any] | None = None,
+                 axis: str = "data"):
+        from ..dist.sharding import mesh_axis_sizes
+        if mesh is None:
+            from ..launch.mesh import make_data_mesh
+            mesh = make_data_mesh()
+        sizes = mesh_axis_sizes(mesh)
+        if axis not in sizes:
+            raise ValueError(f"mesh {tuple(sizes)} has no {axis!r} axis")
+        self.mesh = mesh
+        self.axis = axis
+        self.n_replicas = sizes[axis]
+        # per-replica row blocks are powers of two; global batch sizes
+        # are n_replicas * block, so shard_map splits evenly
+        self.rows_cap = _pow2_batch(
+            max(1, -(-max_batch // self.n_replicas)), max_batch)
+        super().__init__(compiler=compiler,
+                         max_batch=self.n_replicas * self.rows_cap,
+                         min_bucket=min_bucket, registry=registry)
+        self.replica_rows = [0] * self.n_replicas
+
+    def _get_program(self, sequence: str, bucket: int
+                     ) -> tuple[BatchedProgram, dict[str, float]]:
+        if self.n_replicas == 1:             # single-device fallback
+            return super()._get_program(sequence, bucket)
+        key = (sequence, bucket)
+        prog = self._programs.get(key)
+        if prog is None:
+            seq = self.registry[sequence]
+            prog = self.compiler.compile_sharded(
+                seq.script, seq.shapes(bucket), mesh=self.mesh,
+                axis=self.axis, max_batch=self.max_batch,
+                bucket=f"{sequence}/{bucket}")
+            self._pad_values[key] = input_pad_values(prog.graph)
+            self._programs[key] = prog
+        return prog, self._pad_values[key]
+
+    def _dispatch_batch(self, k: int) -> int:
+        rows = _pow2_batch(max(1, -(-k // self.n_replicas)), self.rows_cap)
+        return self.n_replicas * rows
+
+    def _trace_sizes(self) -> list[int]:
+        # rows_cap itself may be non-pow2 (a capped max_batch), so seed
+        # the set with it, exactly as the base class seeds max_batch
+        rows, r = {self.rows_cap}, 1
+        while r < self.rows_cap:
+            rows.add(r)
+            r *= 2
+        return [self.n_replicas * x for x in sorted(rows)]
+
+    def _note_dispatch(self, n_real: int, batch: int) -> None:
+        for j, c in enumerate(replica_fill(n_real, batch, self.n_replicas)):
+            self.replica_rows[j] += c
+
+    def stats(self) -> dict:
+        from ..dist.sharding import mesh_axis_sizes
+        st = super().stats()
+        st["mesh"] = dict(mesh_axis_sizes(self.mesh))
+        st["n_replicas"] = self.n_replicas
+        st["replica_rows"] = list(self.replica_rows)
+        return st

@@ -2,7 +2,6 @@
 driving real BLAS workloads, and the distributed step functions lowering
 with shardings on a multi-device mesh (subprocess: needs forced device
 count before jax init)."""
-import importlib.util
 import json
 import os
 import subprocess
@@ -20,9 +19,10 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def _dist_unsupported() -> str | None:
     """Guard for the distributed subprocess tests: skip (not error) when
-    the pieces they exercise aren't available."""
-    if importlib.util.find_spec("repro.dist") is None:
-        return "repro.dist (sharding layer) not implemented yet"
+    the ambient-mesh API they drive isn't available.  ``repro.dist``
+    itself runs on any supported jax — tests/test_dist.py exercises it
+    with explicit meshes — but these subprocess scripts use
+    ``jax.sharding.set_mesh``."""
     if not hasattr(jax.sharding, "set_mesh"):
         return f"jax {jax.__version__} lacks jax.sharding.set_mesh (needs >= 0.6)"
     return None
