@@ -5,7 +5,9 @@ fused-kernel benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--emit-json`` additionally writes per-sequence predicted + measured
 speedups to ``BENCH_fusion.json`` so the perf trajectory is tracked
-across PRs.
+across PRs; ``--emit-autotune`` runs the empirical-autotune
+rank-correlation report (DESIGN.md §8) and writes
+``BENCH_autotune.json``.
 """
 from __future__ import annotations
 
@@ -23,6 +25,11 @@ def main() -> None:
                     default=None, metavar="PATH",
                     help="write per-sequence predicted+measured speedups "
                          "to PATH (default BENCH_fusion.json)")
+    ap.add_argument("--emit-autotune", nargs="?", const="BENCH_autotune.json",
+                    default=None, metavar="PATH",
+                    help="also run the autotune predicted-vs-measured "
+                         "rank-correlation report (T4E rows) and write "
+                         "it to PATH (default BENCH_autotune.json)")
     args = ap.parse_args()
     n = 1024 if args.quick else 2048
     iters = 3 if args.quick else 5
@@ -73,6 +80,12 @@ def main() -> None:
                              "WAXPBY")]:
             print(f"T4_{r['name']},{r['n_combinations_total']},"
                   f"best_rank={r['best_rank']}")
+
+    # --- autotune: predicted-vs-measured rank correlation (DESIGN.md §8) ----
+    if args.emit_autotune:
+        from benchmarks import autotune_bench
+        autotune_bench.run_all(quick=args.quick,
+                               emit_json=args.emit_autotune)
 
     # --- paper Table 5: compile time ----------------------------------------
     from benchmarks import compile_time

@@ -1,10 +1,13 @@
 """repro.core — the paper's contribution: a fusion compiler for
 map/reduce elementary functions (Filipovič et al., 2013)."""
+from .autotune import (AutotuneReport, CandidateTiming, autotune_combination,
+                       calibrate_hardware, measure_program, synthetic_inputs)
 from .cache import BucketStats, CacheStats, PlanCache, default_cache
 from .codegen import BatchedProgram, CompiledProgram
-from .compiler import CompileReport, FusionCompiler
+from .compiler import MODES, CompileReport, FusionCompiler
 from .elementary import (ArgSpec, Elementary, Kind, Monoid, make_map,
-                         make_nested_map, make_nested_map_reduce, make_reduce)
+                         make_nested_map, make_nested_map_reduce, make_reduce,
+                         make_tensor_map)
 from .fusion import Fusion, analyse_group, enumerate_fusions, saves_traffic
 from .graph import CallNode, Graph, Var, trace
 from .plan import ExecutionPlan, GroupPlan, build_plan, graph_signature
@@ -15,14 +18,18 @@ from .scheduler import (Combination, OptimizationSpace, best_combination,
                         unfused_combination)
 
 __all__ = [
-    "ArgSpec", "BatchedProgram", "BucketStats", "CacheStats", "CallNode",
+    "ArgSpec", "AutotuneReport", "BatchedProgram", "BucketStats",
+    "CacheStats", "CallNode", "CandidateTiming",
     "Combination", "CompileReport", "CompiledProgram",
     "Elementary", "ExecutionPlan", "Fusion", "FusionCompiler", "Graph",
-    "GroupPlan", "HardwareModel", "Impl", "Kind", "Monoid",
+    "GroupPlan", "HardwareModel", "Impl", "Kind", "MODES", "Monoid",
     "OptimizationSpace", "PlanCache", "V5E", "Var", "analyse_group",
-    "best_combination", "build_plan", "build_space", "default_cache",
+    "autotune_combination", "best_combination", "build_plan", "build_space",
+    "calibrate_hardware", "default_cache",
     "enumerate_combinations", "enumerate_fusions", "enumerate_impls",
     "exhaustive_best_combination", "graph_signature", "iter_combinations",
     "make_map", "make_nested_map", "make_nested_map_reduce", "make_reduce",
-    "saves_traffic", "trace", "unfused_combination",
+    "make_tensor_map", "measure_program", "saves_traffic",
+    "synthetic_inputs", "trace",
+    "unfused_combination",
 ]

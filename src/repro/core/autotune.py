@@ -1,0 +1,410 @@
+"""Empirical autotuning (paper §5.2) — DESIGN.md §8.
+
+The paper's headline speedups come from its *empirical search* mode:
+candidates are enumerated in predicted order but the winner is chosen by
+**measuring** them.  This module is that loop for our compiler:
+
+* ``measure_program`` — one timed sample with the timing discipline the
+  serving benchmarks learned the hard way (warmup dispatches,
+  ``block_until_ready``, a ``gc.collect()`` flush before every rep so a
+  cyclic-GC pass over ~100k live jax objects can't land inside the timed
+  window, min-of-reps);
+* ``autotune_combination`` — pull the ``budget`` best combinations from
+  the exact nondecreasing-``t_pred`` A* stream
+  (``scheduler.iter_combinations``, DESIGN.md §3), compile each through
+  the existing codegen, measure, pick the measured winner;
+* a **measured-cost table** content-addressed by ``(graph signature,
+  combination key, hardware/backend fingerprint)`` and persisted through
+  the ``PlanCache`` disk machinery (DESIGN.md §5/§8), so a fleet
+  autotunes each program once — re-running autotune re-measures nothing;
+* ``calibrate_hardware`` — micro-benchmarks (streaming bandwidth,
+  dispatch overhead, f32 flop rate) that replace ``HardwareModel``'s
+  hardcoded v5e constants with numbers from the machine actually
+  running, so ``t_pred`` (and hence the candidate *ordering* the budget
+  is spent on) is meaningful off-TPU too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import gc
+import hashlib
+import math
+import time
+from typing import Any, Mapping
+
+import numpy as np
+
+from . import codegen, scheduler
+from .cache import PlanCache
+from .graph import Graph
+from .plan import ExecutionPlan, build_plan, graph_signature
+from .predictor import V5E, HardwareModel
+from .scheduler import Combination, OptimizationSpace
+
+#: default measurement discipline (overridable per call / per compiler)
+MEAS_REPS = 3
+MEAS_WARMUP = 1
+
+
+# ---------------------------------------------------------------------------
+# timing discipline
+# ---------------------------------------------------------------------------
+
+def synthetic_inputs(g: Graph, seed: int = 0) -> dict[str, np.ndarray]:
+    """Concrete random inputs matching a trace's input signature —
+    what autotune measures candidates on when the caller brings none."""
+    rng = np.random.default_rng(seed)
+    out: dict[str, np.ndarray] = {}
+    for v in g.inputs:
+        if v.shape == ():
+            out[v.name] = np.dtype(v.dtype).type(rng.uniform(0.5, 1.5))
+        else:
+            out[v.name] = rng.standard_normal(v.shape).astype(v.dtype)
+    return out
+
+
+def measure_program(prog, inputs: Mapping[str, Any], *,
+                    reps: int = MEAS_REPS, warmup: int = MEAS_WARMUP) -> float:
+    """Wall-clock seconds per call of ``prog(**inputs)``, min-of-reps.
+
+    Warmup runs absorb jit tracing/compilation; every timed rep flushes
+    the cyclic GC first and blocks on the result, so what's timed is one
+    complete dispatch+execute and nothing else."""
+    for _ in range(max(warmup, 1)):
+        prog.block_until_ready(prog(**inputs))
+    best = math.inf
+    for _ in range(max(reps, 1)):
+        gc.collect()
+        t0 = time.perf_counter()
+        out = prog(**inputs)
+        prog.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# measured-cost table keys
+# ---------------------------------------------------------------------------
+
+def combination_key(plan: ExecutionPlan) -> str:
+    """Content address of one combination *choice*: which calls fuse
+    into which groups, with which grid order and block sizes.  Derived
+    from the plan (deterministic topo order), so it is stable across
+    re-traces and processes."""
+    payload = repr(tuple((gp.call_indices, gp.order_pos, gp.blocks)
+                         for gp in plan.groups))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def hw_fingerprint(backend: str = "jnp", interpret: bool = True) -> str:
+    """Fingerprint of the measuring environment.  Two hosts with the
+    same fingerprint are interchangeable for the measured-cost table
+    (same compiler backend + jax platform/device kind/version), which is
+    what lets a fleet share one table."""
+    import jax
+    dev = jax.devices()[0]
+    return repr((backend, bool(interpret), jax.default_backend(),
+                 getattr(dev, "device_kind", "?"), jax.__version__))
+
+
+def measurement_key(signature: str, combo_key: str, fingerprint: str) -> str:
+    payload = repr((signature, combo_key, fingerprint))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def _finite_time(x) -> bool:
+    return (isinstance(x, (int, float)) and not isinstance(x, bool)
+            and math.isfinite(x) and x > 0)
+
+
+# ---------------------------------------------------------------------------
+# the autotune loop
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CandidateTiming:
+    """One measured candidate (``rank_pred`` = position in the predicted
+    order, i.e. 0 is the model's pick)."""
+
+    rank_pred: int
+    t_pred: float
+    t_meas: float
+    from_cache: bool                   # measured-cost table hit
+    key: str                           # combination_key digest
+
+    def describe(self) -> str:
+        src = "cached" if self.from_cache else "measured"
+        return (f"#{self.rank_pred} t_pred={self.t_pred*1e6:.2f}us "
+                f"t_meas={self.t_meas*1e6:.2f}us ({src})")
+
+
+@dataclasses.dataclass
+class AutotuneReport:
+    """What one autotune pass did — candidates in predicted order."""
+
+    budget: int
+    candidates: list[CandidateTiming]
+    winner_index: int                  # into ``candidates``
+    n_measured: int                    # fresh measurements this pass
+    n_cached: int                      # served from the measured-cost table
+    # the winner's already-compiled (and jit-warmed, by the measurement
+    # loop) program — None when its timing came from the cost table.
+    # Lets the unbatched compile path skip a second codegen+trace.
+    winner_program: Any = dataclasses.field(default=None, repr=False)
+
+    @property
+    def winner(self) -> CandidateTiming:
+        return self.candidates[self.winner_index]
+
+    @property
+    def measured_speedup(self) -> float:
+        """Measured winner vs the predicted-best candidate (== the
+        ``mode="best"`` plan): >= 1.0 by construction."""
+        return self.candidates[0].t_meas / max(self.winner.t_meas, 1e-12)
+
+    def describe(self) -> str:
+        lines = [f"autotune budget={self.budget}: winner #{self.winner_index}"
+                 f" ({self.n_measured} measured, {self.n_cached} cached,"
+                 f" {self.measured_speedup:.2f}x vs predicted best)"]
+        lines += ["  " + c.describe() for c in self.candidates]
+        return "\n".join(lines)
+
+
+def autotune_combination(space: OptimizationSpace, *,
+                         hw: HardwareModel = V5E, backend: str = "jnp",
+                         interpret: bool = True,
+                         cache: PlanCache | None = None,
+                         budget: int = 8, reps: int = MEAS_REPS,
+                         warmup: int = MEAS_WARMUP,
+                         inputs: Mapping[str, Any] | None = None,
+                         seed: int = 0
+                         ) -> tuple[Combination, ExecutionPlan, AutotuneReport]:
+    """Measured-cost search over the ``budget`` best-predicted
+    combinations; returns ``(winner combination, its plan, report)``.
+
+    Candidates come from the exact nondecreasing-``t_pred`` stream, so
+    candidate 0 is exactly the ``mode="best"`` plan — the measured
+    winner is therefore never slower than it (same measurement pass).
+    Measurements are served from / published to ``cache``'s
+    measured-cost table when one is given, so a warm table measures
+    nothing.
+
+    Raises:
+      ValueError: no legal combination covers the graph.
+    """
+    g = space.graph
+    combos = scheduler.enumerate_combinations(space, limit=max(1, budget))
+    if not combos:
+        raise ValueError(
+            "no legal combination covers the graph (the optimization "
+            "space enumerated empty — every fusion impl may have been "
+            "pruned, e.g. by the VMEM budget)")
+    if inputs is None:
+        inputs = synthetic_inputs(g, seed)
+    fp = hw_fingerprint(backend, interpret)
+    sig = graph_signature(g)
+
+    plans, progs, cands = [], [], []
+    n_measured = n_cached = 0
+    winner_i, winner_t = 0, math.inf
+    for i, combo in enumerate(combos):
+        plan = build_plan(g, combo, backend=backend)
+        ck = combination_key(plan)
+        mk = measurement_key(sig, ck, fp)
+        rec = cache.get_measurement(mk) if cache is not None else None
+        if rec is not None and not _finite_time(rec.get("t_meas")):
+            # wrong-schema record (version drift): drop it from memory
+            # and disk so the republish below heals the key, instead of
+            # crashing/poisoning it for every cache-sharing process
+            cache.drop_measurement(mk)
+            rec = None
+        from_cache = rec is not None
+        prog = None
+        if rec is None:
+            prog = codegen.compile_plan(g, plan, hw=hw, interpret=interpret)
+            t = measure_program(prog, inputs, reps=reps, warmup=warmup)
+            rec = {"t_meas": t, "reps": reps, "warmup": warmup}
+            if cache is not None:
+                cache.put_measurement(mk, rec)
+            n_measured += 1
+        else:
+            n_cached += 1
+        t_meas = float(rec["t_meas"])
+        plans.append(plan)
+        progs.append(prog)
+        cands.append(CandidateTiming(rank_pred=i, t_pred=combo.t_pred,
+                                     t_meas=t_meas, from_cache=from_cache,
+                                     key=ck))
+        if t_meas < winner_t:
+            winner_i, winner_t = i, t_meas
+
+    report = AutotuneReport(budget=budget, candidates=cands,
+                            winner_index=winner_i, n_measured=n_measured,
+                            n_cached=n_cached,
+                            winner_program=progs[winner_i])
+    return combos[winner_i], plans[winner_i], report
+
+
+# ---------------------------------------------------------------------------
+# hardware calibration
+# ---------------------------------------------------------------------------
+
+def _round_sig(x: float, sig: int = 2) -> float:
+    """Round to ``sig`` significant figures.  Calibrated constants enter
+    cache keys (via ``repr(HardwareModel)``); coarse rounding keeps the
+    keys stable across the run-to-run jitter of the micro-benchmarks."""
+    if x == 0 or not math.isfinite(x):
+        return x
+    return round(x, -int(math.floor(math.log10(abs(x)))) + (sig - 1))
+
+
+_CALIBRATED: dict[str, HardwareModel] = {}
+
+
+def calibrate_hardware(backend: str | None = None, *, force: bool = False,
+                       reps: int = 3,
+                       cache: PlanCache | None = None) -> HardwareModel:
+    """Micro-benchmark the running machine into a ``HardwareModel``.
+
+    Three measurements (each min-of-``reps``, jit-warmed, blocked):
+
+    * **streaming bandwidth** — elementwise add over a 32 MiB f32
+      array, 2 bytes moved per element byte → ``hbm_bw``;
+    * **dispatch overhead** — a pipeline of tiny jitted calls, time per
+      call → ``launch_overhead_s``;
+    * **flop rate** — a 384x384 f32 matmul → ``peak_flops`` (stored
+      with ``f32_scale=1.0``: on the machines this runs on, f32 *is*
+      the measured rate, and ``flops_scale`` keeps sub-4-byte dtypes at
+      the same peak).
+
+    ``backend`` selects the jax platform (default: the default
+    backend).  Results are memoized per platform and rounded to 2
+    significant figures so the constants — which feed compiler cache
+    keys — are stable across runs.  They are additionally published to
+    the measurement layer of ``cache`` (default: the process-wide
+    cache, hence ``REPRO_PLAN_CACHE_DIR`` when set), keyed on the
+    platform fingerprint, and the store's **first-written** record
+    always wins — a process that loses the publish race (or calibrated
+    earlier against a different cache) adopts the winner's constants.
+    Every process/host sharing the cache dir therefore calibrates once
+    and uses *identical* constants, keeping their plan-cache keys
+    aligned; without this, run-to-run jitter crossing a rounding
+    boundary would fork the fleet's plan keys.  ``force=True``
+    re-measures, but a persisted record still governs what is returned
+    (delete the record to truly re-calibrate a shared store).
+    ``min_tile`` and ``vmem_bytes`` keep their defaults: they encode
+    layout/pruning policy, not speed.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    platform = backend or jax.default_backend()
+    dev = jax.devices(platform)[0]
+    if cache is None:
+        from .cache import default_cache
+        cache = default_cache()
+    cal_key = hashlib.sha256(repr(
+        ("calibration", platform, getattr(dev, "device_kind", "?"),
+         jax.__version__)).encode()).hexdigest()
+
+    def from_record(rec) -> HardwareModel | None:
+        if not isinstance(rec, dict) or rec.get("kind") != "calibration":
+            return None
+        try:
+            pf, bw, lo = (float(rec[k]) for k in
+                          ("peak_flops", "hbm_bw", "launch_overhead_s"))
+        except (KeyError, TypeError, ValueError):
+            return None
+        if not all(math.isfinite(v) and v > 0 for v in (pf, bw, lo)):
+            return None
+        return HardwareModel(
+            name=str(rec.get("name", f"calibrated_{platform}")),
+            peak_flops=pf, f32_scale=1.0, hbm_bw=bw,
+            vmem_bytes=V5E.vmem_bytes, launch_overhead_s=lo,
+            min_tile=V5E.min_tile)
+
+    def record_of(hw: HardwareModel) -> dict:
+        return {"kind": "calibration", "name": hw.name,
+                "peak_flops": hw.peak_flops, "hbm_bw": hw.hbm_bw,
+                "launch_overhead_s": hw.launch_overhead_s}
+
+    def adopt(hw: HardwareModel) -> HardwareModel:
+        """Publish, then converge on the store's first-written record:
+        if another process won the disk race, *its* constants stand —
+        everyone sharing the dir ends on identical plan-cache keys."""
+        cache.put_measurement(cal_key, record_of(hw))
+        if cache.disk_dir:
+            cache.forget_measurement(cal_key)   # local copy masks disk
+            got = from_record(cache.get_measurement(cal_key))
+            if got is not None:
+                hw = got
+            else:                               # unreadable dir: local wins
+                cache.put_measurement(cal_key, record_of(hw))
+        memo = _CALIBRATED.get(platform)
+        if memo != hw:                          # keep object identity stable
+            _CALIBRATED[platform] = hw
+        return _CALIBRATED[platform]
+
+    if not force:
+        memo = _CALIBRATED.get(platform)
+        rec = cache.get_measurement(cal_key)
+        got = from_record(rec)
+        if got is not None:
+            if memo != got:
+                _CALIBRATED[platform] = got
+            return _CALIBRATED[platform]
+        if rec is not None:
+            cache.drop_measurement(cal_key)     # schema drift: heal the key
+        if memo is not None:
+            return adopt(memo)                  # share with this cache too
+
+    def best_of(fn, *args):
+        jax.block_until_ready(fn(*args))                   # warm the jit
+        best = math.inf
+        for _ in range(max(reps, 1)):
+            gc.collect()
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    with jax.default_device(dev):
+        # streaming bandwidth: read + write one 32 MiB f32 buffer
+        n_stream = 8 * 1024 * 1024
+        xs = jnp.zeros((n_stream,), jnp.float32)
+        add1 = jax.jit(lambda x: x + 1.0)
+        t_stream = best_of(add1, xs)
+        hbm_bw = 2.0 * 4.0 * n_stream / max(t_stream, 1e-9)
+
+        # dispatch overhead: per-call cost of a pipeline of tiny calls
+        tiny = jax.jit(lambda x: x + 1.0)
+        xt = jnp.zeros((8,), jnp.float32)
+        tiny(xt).block_until_ready()
+        n_calls = 200
+        best = math.inf
+        for _ in range(max(reps, 1)):
+            gc.collect()
+            y = xt
+            t0 = time.perf_counter()
+            for _ in range(n_calls):
+                y = tiny(y)
+            y.block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        launch = best / n_calls
+
+        # f32 flop rate: one square matmul
+        m = 384
+        a = jnp.ones((m, m), jnp.float32)
+        mm = jax.jit(lambda x: x @ x)
+        t_mm = best_of(mm, a)
+        flops = 2.0 * m ** 3 / max(t_mm, 1e-9)
+
+    return adopt(HardwareModel(
+        name=f"calibrated_{platform}",
+        peak_flops=_round_sig(flops),
+        f32_scale=1.0,
+        hbm_bw=_round_sig(hbm_bw),
+        vmem_bytes=V5E.vmem_bytes,
+        launch_overhead_s=_round_sig(launch),
+        min_tile=V5E.min_tile,
+    ))

@@ -14,6 +14,15 @@ compiler:
   combination search (the expensive stages); codegen re-binds the plan
   to the fresh trace.  The disk layer survives process restarts: set
   ``REPRO_PLAN_CACHE_DIR`` or pass ``disk_dir``.
+* **measurement layer** (in-memory LRU + the same on-disk machinery) —
+  maps a measured-cost key (graph signature, combination key, hardware/
+  backend fingerprint — computed by ``core.autotune``) to one empirical
+  timing record.  A hit lets ``mode="autotune"`` skip re-measuring a
+  candidate; shared through the disk dir, a fleet autotunes each
+  program once (DESIGN.md §8).  Timing records are not bit-identical
+  across hosts the way plans are, but the key pins the hardware
+  fingerprint, so first-writer-wins keeps the protocol lock-free at the
+  cost of accepting one host's (min-of-reps, so low-biased) sample.
 
 The disk layer doubles as the **fleet-shared cache** (DESIGN.md §7):
 point every serving host's ``REPRO_PLAN_CACHE_DIR`` at one shared
@@ -36,6 +45,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import json
 import os
 import tempfile
 import time
@@ -65,6 +75,10 @@ class CacheStats:
     plan_misses: int = 0
     disk_hits: int = 0
     disk_writes: int = 0
+    meas_hits: int = 0
+    meas_misses: int = 0
+    meas_disk_hits: int = 0
+    meas_writes: int = 0
     buckets: dict[str, BucketStats] = dataclasses.field(default_factory=dict)
 
     def record_bucket(self, label: str, *, hit: bool, seconds: float = 0.0):
@@ -97,6 +111,9 @@ class _LRU:
         while len(self._d) > self.capacity:
             self._d.popitem(last=False)
 
+    def pop(self, key: str):
+        return self._d.pop(key, None)
+
     def __len__(self):
         return len(self._d)
 
@@ -108,6 +125,9 @@ class PlanCache:
     def __init__(self, capacity: int = 256, disk_dir: str | None = None):
         self._programs = _LRU(capacity)
         self._plans = _LRU(capacity)
+        # measurement records are tiny and an autotune pass produces
+        # `budget` of them per graph — give the layer headroom
+        self._measurements = _LRU(capacity * 8)
         self.disk_dir = disk_dir if disk_dir is not None else os.environ.get(_ENV_DIR)
         self.stats = CacheStats()
 
@@ -173,36 +193,106 @@ class PlanCache:
         except OSError:
             pass
 
+    def _publish(self, path: str, text: str) -> bool:
+        """First-writer-wins atomic disk publish; returns True on a
+        fresh write.  A broken cache dir degrades to a no-op, never
+        fails the caller."""
+        if os.path.exists(path):
+            # keys are content addresses, so an existing entry IS this
+            # payload: first writer wins, later fleet warmers skip the I/O
+            return False
+        tmp = None
+        try:
+            os.makedirs(self.disk_dir, exist_ok=True)
+            self._gc_tmp()
+            # atomic publish: write-to-temp + rename, so concurrent
+            # compilers (other processes/hosts) never read torn files
+            fd, tmp = tempfile.mkstemp(dir=self.disk_dir, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                f.write(text)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+            return True
+        except OSError:
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+            return False
+
     def put_plan(self, key: str, plan: ExecutionPlan):
         self._plans.put(key, plan)
         path = self._disk_path(key)
-        if path and not os.path.exists(path):
-            # keys are content addresses, so an existing entry IS this
-            # plan: first writer wins, later fleet warmers skip the I/O.
-            # A broken cache dir degrades to a miss, never fails compile.
-            tmp = None
+        if path and self._publish(path, plan.to_json()):
+            self.stats.disk_writes += 1
+
+    # -- measurement layer (autotune measured costs, DESIGN.md §8) -----------
+    def _meas_path(self, key: str) -> str | None:
+        if not self.disk_dir:
+            return None
+        return os.path.join(self.disk_dir, f"{key}.meas.json")
+
+    def get_measurement(self, key: str) -> dict | None:
+        rec = self._measurements.get(key)
+        if rec is not None:
+            self.stats.meas_hits += 1
+            return rec
+        path = self._meas_path(key)
+        if path and os.path.exists(path):
             try:
-                os.makedirs(self.disk_dir, exist_ok=True)
-                self._gc_tmp()
-                # atomic publish: write-to-temp + rename, so concurrent
-                # compilers (other processes/hosts) never read torn files
-                fd, tmp = tempfile.mkstemp(dir=self.disk_dir, suffix=".tmp")
-                with os.fdopen(fd, "w") as f:
-                    f.write(plan.to_json())
-                    f.flush()
-                    os.fsync(f.fileno())
-                os.replace(tmp, path)
-                self.stats.disk_writes += 1
+                with open(path) as f:
+                    rec = json.load(f)
+            except (OSError, ValueError):
+                rec = None
+            if not isinstance(rec, dict):
+                # stale/corrupt/wrong-shape entry: drop it so the
+                # first-writer-wins put_measurement can republish —
+                # otherwise a bad file poisons its key fleet-wide
+                rec = None
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+            if rec is not None:
+                self.stats.meas_hits += 1
+                self.stats.meas_disk_hits += 1
+                self._measurements.put(key, rec)
+                return rec
+        self.stats.meas_misses += 1
+        return None
+
+    def put_measurement(self, key: str, rec: dict):
+        self._measurements.put(key, rec)
+        path = self._meas_path(key)
+        if path and self._publish(path, json.dumps(rec)):
+            self.stats.meas_writes += 1
+
+    def forget_measurement(self, key: str):
+        """Drop the in-memory copy only (the disk record, if any,
+        stands).  Lets a caller re-read the store's first-written
+        record after publishing its own — the convergence step of the
+        calibration protocol (DESIGN.md §8)."""
+        self._measurements.pop(key)
+
+    def drop_measurement(self, key: str):
+        """Remove a measurement from memory AND disk.  For callers that
+        found the record invalid for their schema: without the unlink,
+        first-writer-wins would keep the bad file and poison the key
+        for every cache-sharing process."""
+        self._measurements.pop(key)
+        path = self._meas_path(key)
+        if path:
+            try:
+                os.unlink(path)
             except OSError:
-                if tmp is not None:
-                    try:
-                        os.unlink(tmp)
-                    except OSError:
-                        pass
+                pass
 
     def clear(self):
         self._programs.clear()
         self._plans.clear()
+        self._measurements.clear()
         self.stats = CacheStats()
 
 

@@ -26,11 +26,14 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from . import codegen, graph, scheduler
+from . import autotune, codegen, graph, scheduler
 from .cache import PlanCache, default_cache
 from .plan import build_plan, graph_signature
 from .predictor import V5E, HardwareModel
 from .scheduler import Combination, OptimizationSpace
+
+#: search modes with names (integer ranks are also accepted)
+MODES = ("best", "unfused", "autotune")
 
 
 @dataclasses.dataclass
@@ -50,19 +53,44 @@ class CompileReport:
 
 
 class FusionCompiler:
-    def __init__(self, hw: HardwareModel = V5E, backend: str = "jnp",
+    def __init__(self, hw: HardwareModel | str = V5E, backend: str = "jnp",
                  interpret: bool = True, max_impls_per_fusion: int = 64,
                  dtype=np.float32,
-                 cache: PlanCache | bool | None = True):
+                 cache: PlanCache | bool | None = True,
+                 autotune_budget: int = 8,
+                 autotune_reps: int = autotune.MEAS_REPS,
+                 autotune_warmup: int = autotune.MEAS_WARMUP):
+        """``hw`` takes a HardwareModel or the string ``"calibrate"``
+        (micro-benchmark this machine, ``HardwareModel.calibrate``).
+        ``autotune_budget`` is how many predicted-best candidates
+        ``mode="autotune"`` measures; it is part of the autotune cache
+        keys (a bigger budget is a different — more thorough — search),
+        while reps/warmup are measurement discipline only."""
+        if cache is True:
+            self.cache: PlanCache | None = default_cache()
+        else:
+            self.cache = cache or None
+        if isinstance(hw, str):
+            if hw != "calibrate":
+                raise ValueError(f"unknown hw {hw!r}: pass a HardwareModel "
+                                 "or the string 'calibrate'")
+            # calibrate against THIS compiler's cache, so a fleet
+            # sharing plans through it shares the constants too
+            hw = autotune.calibrate_hardware(cache=self.cache)
         self.hw = hw
         self.backend = backend
         self.interpret = interpret
         self.max_impls = max_impls_per_fusion
         self.dtype = np.dtype(dtype)
-        if cache is True:
-            self.cache: PlanCache | None = default_cache()
-        else:
-            self.cache = cache or None
+        self.autotune_budget = autotune_budget
+        self.autotune_reps = autotune_reps
+        self.autotune_warmup = autotune_warmup
+        #: report of the most recent autotune *search* this compiler ran
+        #: (None until one runs; cache-served compiles don't update it)
+        self.last_autotune: autotune.AutotuneReport | None = None
+        # winner program handoff from _plan_for to compile (the search
+        # already compiled+warmed it; don't pay codegen+trace twice)
+        self._autotune_prog = None
 
     # -- stages ------------------------------------------------------------
     def trace(self, script: Callable, input_shapes: dict[str, Sequence[int]]
@@ -72,25 +100,73 @@ class FusionCompiler:
     def space(self, g: graph.Graph) -> OptimizationSpace:
         return scheduler.build_space(g, self.hw, self.max_impls)
 
-    def search(self, space: OptimizationSpace, mode) -> Combination:
+    def search(self, space: OptimizationSpace, mode,
+               backend: str | None = None) -> Combination:
+        """Pick a combination: ``'best'`` / ``'unfused'`` / an integer
+        rank into the predicted-order stream / ``'autotune'`` (measure
+        the top ``autotune_budget`` candidates and take the measured
+        winner — DESIGN.md §8)."""
+        self._mode_key(mode)            # validate (bools, unknown strings)
         if mode == "best":
             return scheduler.best_combination(space)
         if mode == "unfused":
             return scheduler.unfused_combination(space)
-        if isinstance(mode, int):
-            combos = scheduler.enumerate_combinations(space, limit=mode + 1)
-            if not combos:
-                raise ValueError(
-                    "no legal combination covers the graph (the "
-                    "optimization space enumerated empty — every fusion "
-                    "impl may have been pruned, e.g. by the VMEM budget)")
-            return combos[min(mode, len(combos) - 1)]
-        raise ValueError(f"bad mode {mode!r}")
+        if mode == "autotune":
+            combo, _ = self._autotune(space, backend or self.backend)
+            return combo
+        if mode < 0:
+            raise ValueError(f"combination index must be >= 0, got {mode}")
+        combos = scheduler.enumerate_combinations(space, limit=mode + 1)
+        if not combos:
+            raise ValueError(
+                "no legal combination covers the graph (the "
+                "optimization space enumerated empty — every fusion "
+                "impl may have been pruned, e.g. by the VMEM budget)")
+        if mode >= len(combos):
+            # silently clamping would also cache a duplicate plan under
+            # this index's key, corrupting compile_all's index<->plan
+            # correspondence
+            raise ValueError(
+                f"combination index {mode} out of range: the space has "
+                f"only {len(combos)} legal combination(s)")
+        return combos[mode]
+
+    def _autotune(self, space: OptimizationSpace, backend: str):
+        """One call site for the measured-cost search (used by both
+        ``search`` and ``_plan_for``); records ``last_autotune``."""
+        combo, plan, report = autotune.autotune_combination(
+            space, hw=self.hw, backend=backend, interpret=self.interpret,
+            cache=self.cache, budget=self.autotune_budget,
+            reps=self.autotune_reps, warmup=self.autotune_warmup)
+        self.last_autotune = report
+        return combo, plan
 
     # -- cache keys --------------------------------------------------------
-    def _config_key(self, backend: str, mode) -> str:
+    def _mode_key(self, mode):
+        """Validate ``mode`` and return its cache-key form.
+
+        ``'autotune'`` keys as ``('autotune', budget)`` — a bigger
+        budget is a deeper search, so it must not alias a shallower
+        one.  Bools are rejected explicitly: ``isinstance(True, int)``
+        holds, so they would otherwise silently select combination
+        index 0/1."""
+        if isinstance(mode, bool) or not isinstance(mode, (str, int)):
+            raise ValueError(
+                f"bad mode {mode!r}: valid modes are "
+                f"{', '.join(repr(m) for m in MODES)}, or an integer "
+                f"rank into the predicted-order combination stream")
+        if mode == "autotune":
+            return ("autotune", self.autotune_budget)
+        if isinstance(mode, str) and mode not in MODES:
+            raise ValueError(
+                f"unknown mode {mode!r}: valid modes are "
+                f"{', '.join(repr(m) for m in MODES)}, or an integer "
+                f"rank into the predicted-order combination stream")
+        return mode
+
+    def _config_key(self, backend: str, mode_key) -> str:
         # full hw repr, not just .name: custom models keep the default name
-        return repr((backend, mode, self.hw, self.interpret,
+        return repr((backend, mode_key, self.hw, self.interpret,
                      self.max_impls))
 
     @staticmethod
@@ -113,7 +189,7 @@ class FusionCompiler:
 
     def _program_key(self, script: Callable,
                      input_shapes: dict[str, Sequence[int]],
-                     backend: str, mode) -> str | None:
+                     backend: str, mode_key) -> str | None:
         """Pre-trace content address of a compile request, or None when
         the script is not safely addressable (a closure cell without a
         stable fingerprint) — the caller then skips the program layer
@@ -134,12 +210,39 @@ class FusionCompiler:
             ident = (repr(script),)
         payload = repr((ident,
                         sorted((k, tuple(v)) for k, v in input_shapes.items()),
-                        str(self.dtype), self._config_key(backend, mode)))
+                        str(self.dtype), self._config_key(backend, mode_key)))
         return hashlib.sha256(payload.encode()).hexdigest()
 
-    def _plan_key(self, g: graph.Graph, backend: str, mode) -> str:
-        payload = repr((graph_signature(g), self._config_key(backend, mode)))
+    def _plan_key(self, g: graph.Graph, backend: str, mode_key) -> str:
+        payload = repr((graph_signature(g),
+                        self._config_key(backend, mode_key)))
         return hashlib.sha256(payload.encode()).hexdigest()
+
+    # -- shared plan resolution ---------------------------------------------
+    def _plan_for(self, g: graph.Graph, mode, backend: str, mode_key):
+        """Plan-cache-consulting search shared by every entry point
+        (unbatched / batched / sharded — they key plans identically, so
+        a plan found by one is a hit for all).  A plan-layer hit for
+        ``mode='autotune'`` performs zero measurements — the winner was
+        already decided (possibly by another process via the disk
+        layer)."""
+        cache = self.cache
+        self._autotune_prog = None
+        plan = plan_key = None
+        if cache is not None:
+            plan_key = self._plan_key(g, backend, mode_key)
+            plan = cache.get_plan(plan_key)
+        if plan is None:
+            space = self.space(g)
+            if mode == "autotune":
+                _, plan = self._autotune(space, backend)
+                self._autotune_prog = self.last_autotune.winner_program
+            else:
+                combo = self.search(space, mode, backend=backend)
+                plan = build_plan(g, combo, backend=backend)
+            if cache is not None:
+                cache.put_plan(plan_key, plan)
+        return plan
 
     @staticmethod
     def _bucket_label(input_shapes: dict[str, Sequence[int]]) -> str:
@@ -160,8 +263,13 @@ class FusionCompiler:
             shape-specialized, like the paper's generated CUDA.
           mode: ``'best'`` (predicted-best combination, bitmask-DP /
             beam search), ``'unfused'`` (CUBLAS-style one-kernel-per-
-            call baseline), or an integer rank into the ``t_pred``-
-            sorted combination stream (empirical search, paper §5.2).
+            call baseline), ``'autotune'`` (measure the top
+            ``autotune_budget`` predicted candidates and take the
+            measured winner — the paper's §5.2 empirical search,
+            DESIGN.md §8; measurements persist in the cache's
+            measured-cost table, so a repeat compile measures nothing),
+            or an integer rank into the ``t_pred``-sorted combination
+            stream.
           backend: ``'jnp'`` or ``'pallas'`` (defaults to the
             compiler's).
           report: diagnostic path — always runs the full pipeline
@@ -173,8 +281,9 @@ class FusionCompiler:
           the whole sequence as a single XLA dispatch.
 
         Raises:
-          ValueError: unknown ``mode``, or an integer mode for which no
-            legal combination covers the graph.
+          ValueError: unknown or bool ``mode``, or an integer rank with
+            no matching combination (empty space, negative, or past the
+            number of legal combinations).
 
         Example::
 
@@ -184,31 +293,27 @@ class FusionCompiler:
             z, r = prog(w=w, v=v, u=u, alpha=np.float32(0.3))
         """
         backend = backend or self.backend
+        mode_key = self._mode_key(mode)
         if report:
             return self._compile_report(script, input_shapes, mode, backend)
 
         cache = self.cache
         pkey = None
         if cache is not None:
-            pkey = self._program_key(script, input_shapes, backend, mode)
+            pkey = self._program_key(script, input_shapes, backend, mode_key)
             if pkey is not None:
                 prog = cache.get_program(pkey)
                 if prog is not None:
                     return prog
 
         g = self.trace(script, input_shapes)
-        plan = None
-        if cache is not None:
-            plan_key = self._plan_key(g, backend, mode)
-            plan = cache.get_plan(plan_key)
-        if plan is None:
-            space = self.space(g)
-            combo = self.search(space, mode)
-            plan = build_plan(g, combo, backend=backend)
-            if cache is not None:
-                cache.put_plan(plan_key, plan)
-        prog = codegen.compile_plan(g, plan, hw=self.hw,
-                                    interpret=self.interpret)
+        plan = self._plan_for(g, mode, backend, mode_key)
+        # a fresh autotune search already compiled (and jit-warmed) the
+        # winner during measurement — reuse it instead of re-codegening
+        prog, self._autotune_prog = self._autotune_prog, None
+        if prog is None or prog.plan != plan:
+            prog = codegen.compile_plan(g, plan, hw=self.hw,
+                                        interpret=self.interpret)
         if cache is not None and pkey is not None:
             cache.put_program(pkey, prog)
         return prog
@@ -250,13 +355,14 @@ class FusionCompiler:
             # W/V/U: (8, 1024); z: (8, 1024); r: (8,)
         """
         backend = backend or self.backend
+        mode_key = self._mode_key(mode)
         bucket = bucket or self._bucket_label(input_shapes)
         t0 = time.perf_counter()
         cache = self.cache
         pkey = None
         if cache is not None:
             pkey = self._program_key(script, input_shapes, backend,
-                                     ("batched", mode, max_batch))
+                                     ("batched", mode_key, max_batch))
             if pkey is not None:
                 prog = cache.get_program(pkey)
                 if prog is not None:
@@ -265,16 +371,7 @@ class FusionCompiler:
                     return prog
 
         g = self.trace(script, input_shapes)
-        plan = None
-        if cache is not None:
-            plan_key = self._plan_key(g, backend, mode)
-            plan = cache.get_plan(plan_key)
-        if plan is None:
-            space = self.space(g)
-            combo = self.search(space, mode)
-            plan = build_plan(g, combo, backend=backend)
-            if cache is not None:
-                cache.put_plan(plan_key, plan)
+        plan = self._plan_for(g, mode, backend, mode_key)
         prog = codegen.compile_plan_batched(g, plan, max_batch=max_batch,
                                             hw=self.hw,
                                             interpret=self.interpret)
@@ -319,6 +416,7 @@ class FusionCompiler:
             shard_program
 
         backend = backend or self.backend
+        mode_key = self._mode_key(mode)
         bucket = bucket or self._bucket_label(input_shapes)
         sizes = mesh_axis_sizes(mesh)
         if axis not in sizes:
@@ -333,7 +431,8 @@ class FusionCompiler:
         if cache is not None:
             pkey = self._program_key(
                 script, input_shapes, backend,
-                ("sharded", mode, max_batch, axis, mesh_fingerprint(mesh)))
+                ("sharded", mode_key, max_batch, axis,
+                 mesh_fingerprint(mesh)))
             if pkey is not None:
                 prog = cache.get_program(pkey)
                 if prog is not None:
@@ -353,7 +452,7 @@ class FusionCompiler:
         g = self.trace(script, input_shapes)
         t1 = time.perf_counter()
         space = self.space(g)
-        combo = self.search(space, mode)
+        combo = self.search(space, mode, backend=backend)
         t2 = time.perf_counter()
         plan = build_plan(g, combo, backend=backend)
         prog = codegen.compile_plan(g, plan, hw=self.hw,
@@ -371,15 +470,58 @@ class FusionCompiler:
     def compile_all(self, script: Callable,
                     input_shapes: dict[str, Sequence[int]],
                     limit: int = 256, backend: str | None = None):
-        """Every combination (sorted by prediction) — empirical search."""
+        """Compile the ``limit`` best combinations (predicted order) —
+        the raw material of empirical search (paper §5.2; the managed
+        version is ``mode="autotune"``).
+
+        Routed through the shared cache machinery: candidate ``i`` uses
+        the same program/plan keys as ``compile(..., mode=i)``, so a
+        repeat ``compile_all`` — or a prior integer-mode compile — is
+        served from cache, every consultation lands in ``cache.stats``,
+        and the optimization space is only rebuilt when some candidate
+        actually misses both layers.
+
+        Returns:
+          ``[(Combination, CompiledProgram), ...]`` — at most ``limit``
+          entries, fewer when the space has fewer legal combinations.
+        """
         backend = backend or self.backend
+        cache = self.cache
         g = self.trace(script, input_shapes)
-        space = self.space(g)
-        combos = scheduler.enumerate_combinations(space, limit=limit)
-        return [(c, codegen.compile_combination(g, c, backend=backend,
-                                                interpret=self.interpret,
-                                                hw=self.hw))
-                for c in combos]
+        space = combos = None
+        out = []
+        for i in range(limit):
+            mode_key = self._mode_key(i)
+            prog = pkey = None
+            if cache is not None:
+                pkey = self._program_key(script, input_shapes, backend,
+                                         mode_key)
+                if pkey is not None:
+                    prog = cache.get_program(pkey)
+            if prog is None:
+                plan = plan_key = None
+                if cache is not None:
+                    plan_key = self._plan_key(g, backend, mode_key)
+                    plan = cache.get_plan(plan_key)
+                if plan is None:
+                    if combos is None:
+                        space = self.space(g)
+                        combos = scheduler.enumerate_combinations(
+                            space, limit=limit)
+                    if i >= len(combos):
+                        break
+                    plan = build_plan(g, combos[i], backend=backend)
+                    if cache is not None:
+                        cache.put_plan(plan_key, plan)
+                prog = codegen.compile_plan(g, plan, hw=self.hw,
+                                            interpret=self.interpret)
+                if cache is not None and pkey is not None:
+                    cache.put_program(pkey, prog)
+            impls = tuple(prog.group_impls)
+            out.append((Combination(impls=impls,
+                                    t_pred=sum(im.t_pred for im in impls)),
+                        prog))
+        return out
 
     def oracle(self, script: Callable, input_shapes: dict[str, Sequence[int]]
                ) -> Callable:

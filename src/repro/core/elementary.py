@@ -103,7 +103,11 @@ class Elementary:
 
     def __post_init__(self):
         depth = len(self.formal_axes)
-        assert depth in (1, 2), "paper supports nesting depth <= 2"
+        # the paper stops at depth 2; deeper maps (batched matrices,
+        # tensor contractions) are a compatible extension — every layer
+        # downstream (trace axes, fusion legality, impl enumeration,
+        # codegen index maps) is rank-generic
+        assert depth >= 1, "elementary needs at least one iteration axis"
         for spec in self.in_specs:
             assert all(0 <= a < depth for a in spec.axes)
         assert all(0 <= a < depth for a in self.out_axes)
@@ -170,6 +174,21 @@ def make_nested_map(name: str, fn: Callable, in_axes: Sequence[Sequence[int]], *
         name=name, kind=Kind.NESTED_MAP, formal_axes=("i", "j"),
         in_specs=tuple(ArgSpec(tuple(a)) for a in in_axes), out_axes=(0, 1),
         fn=fn, flops_per_point=flops_per_point, elem=elem,
+    )
+
+
+def make_tensor_map(name: str, fn: Callable, in_axes: Sequence[Sequence[int]],
+                    depth: int, *, flops_per_point: float = 1.0) -> Elementary:
+    """Depth-``depth`` map producing a rank-``depth`` tensor.
+
+    Extension past the paper's depth-2 taxonomy (batched matrix maps
+    etc.); ``in_axes`` follows the ``make_nested_map`` convention."""
+    return Elementary(
+        name=name, kind=Kind.NESTED_MAP,
+        formal_axes=tuple(f"a{k}" for k in range(depth)),
+        in_specs=tuple(ArgSpec(tuple(a)) for a in in_axes),
+        out_axes=tuple(range(depth)), fn=fn,
+        flops_per_point=flops_per_point,
     )
 
 

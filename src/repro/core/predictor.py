@@ -33,7 +33,13 @@ from .graph import Graph, Var
 
 @dataclasses.dataclass(frozen=True)
 class HardwareModel:
-    """Calibrated machine constants (defaults: one TPU v5e core)."""
+    """Machine constants feeding ``t_pred`` (defaults: one TPU v5e core).
+
+    The defaults are datasheet numbers and are wrong on anything that is
+    not a v5e — most notably the CPU containers CI runs on.  Use
+    :meth:`calibrate` to micro-benchmark the machine actually running
+    (DESIGN.md §8) when predicted times must be meaningful, e.g. for the
+    empirical autotune mode's candidate ordering."""
 
     name: str = "tpu_v5e"
     peak_flops: float = 197e12          # bf16; f32 ~ 98 TF/s, see scale below
@@ -44,8 +50,49 @@ class HardwareModel:
     # minimum efficient tile (sublane, lane) for f32
     min_tile: tuple[int, int] = (8, 128)
 
+    def flops_scale(self, dtype) -> float:
+        """Compute-rate derate for ``dtype`` relative to ``peak_flops``.
+
+        Sub-4-byte types (bf16/f16/int8) run at peak, 4-byte at
+        ``f32_scale``, 8-byte at half that again — the MXU pattern."""
+        size = np.dtype(dtype).itemsize
+        if size <= 2:
+            return 1.0
+        if size <= 4:
+            return self.f32_scale
+        return self.f32_scale / 2.0
+
+    def min_tile_for(self, dtype) -> tuple[int, int]:
+        """Minimum efficient (sublane, lane) tile for ``dtype``.
+
+        The lane count is fixed; sublanes scale inversely with itemsize
+        so the packed tile stays the same size in bytes: f32 (8, 128),
+        bf16 (16, 128), int8 (32, 128)."""
+        size = max(1, np.dtype(dtype).itemsize)
+        return (max(1, self.min_tile[0] * 4 // size), self.min_tile[1])
+
+    @classmethod
+    def calibrate(cls, backend: str | None = None,
+                  force: bool = False) -> "HardwareModel":
+        """Micro-benchmark the running machine into a HardwareModel:
+        streaming bandwidth, per-dispatch overhead and f32 flop rate
+        replace the hardcoded v5e constants (memoized per platform; see
+        ``core.autotune.calibrate_hardware``)."""
+        from .autotune import calibrate_hardware
+        return calibrate_hardware(backend=backend, force=force)
+
 
 V5E = HardwareModel()
+
+
+def fusion_dtype(f: "Fusion") -> np.dtype:
+    """The dtype the cost model charges a fusion at: the widest dtype
+    streamed over HBM (inputs or outputs) — mixed-precision fusions are
+    dominated by their widest stream."""
+    vs = tuple(f.external_inputs) + tuple(f.outputs)
+    if not vs:
+        return np.dtype(np.float32)
+    return max((np.dtype(v.dtype) for v in vs), key=lambda d: d.itemsize)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,7 +201,8 @@ def cost_impl(f: Fusion, g: Graph, order: tuple[int, ...],
         for a in v.axis_ids:
             r = g.axis_root(a)
             n *= blk.get(r, 1)
-        return max(n, v.dtype.itemsize * hw.min_tile[0] * hw.min_tile[1])
+        sub, lane = hw.min_tile_for(v.dtype)
+        return max(n, v.dtype.itemsize * sub * lane)
 
     vmem = 0.0
     for v in f.external_inputs:
@@ -165,7 +213,7 @@ def cost_impl(f: Fusion, g: Graph, order: tuple[int, ...],
         vmem += block_bytes(v)
 
     t_t = traffic / hw.hbm_bw
-    t_c = flops / (hw.peak_flops * hw.f32_scale)
+    t_c = flops / (hw.peak_flops * hw.flops_scale(fusion_dtype(f)))
     t = max(t_t, t_c) + hw.launch_overhead_s
     return Impl(fusion=f, order=order, blocks=blocks, traffic_bytes=traffic,
                 flops=flops, vmem_bytes=vmem, t_transfer=t_t, t_compute=t_c,
@@ -181,16 +229,21 @@ def enumerate_impls(f: Fusion, g: Graph, hw: HardwareModel = V5E,
     """
     roots, sizes = f.axis_roots, f.axis_sizes
     depth = len(roots)
+    dt = fusion_dtype(f)
+    min_tile = hw.min_tile_for(dt)
     cands: list[Impl] = []
     if depth == 1:
-        min_b = hw.min_tile[1]
+        min_b = min_tile[1]
         for b in _divisor_blocks(sizes[0], min_b, maximum=1 << 22):
             cands.append(cost_impl(f, g, roots, (b,), hw))
     else:
-        min_i, min_j = hw.min_tile
+        # the last two canonical axes are the in-memory (sublane, lane)
+        # pair and carry the tiling minima; axes above them (depth >= 3:
+        # batch-like dims) may block at any divisor
+        mins = [1] * (depth - 2) + [min_tile[0], min_tile[1]]
         blocks_per_axis = [
-            _divisor_blocks(sizes[0], min_i, maximum=1 << 16),
-            _divisor_blocks(sizes[1], min_j, maximum=1 << 16),
+            _divisor_blocks(sizes[k], mins[k], maximum=1 << 16)
+            for k in range(depth)
         ]
         for order in itertools.permutations(range(depth)):
             o_roots = tuple(roots[i] for i in order)

@@ -12,6 +12,16 @@ function.
     PYTHONPATH=src python -m repro.launch.serve --blas GEMVER \
         --requests 200 --n 1024
 
+Empirical autotuning (DESIGN.md §8): ``--autotune`` compiles with
+``mode="autotune"`` — the top ``--budget`` predicted combinations are
+measured on a calibrated hardware model and the measured winner is
+served; measurements persist in the plan cache's measured-cost table,
+so a warm cache (or fleet-shared ``REPRO_PLAN_CACHE_DIR``) re-measures
+nothing.
+
+    PYTHONPATH=src python -m repro.launch.serve --blas GEMVER \
+        --autotune --budget 4 --requests 8 --n 256
+
 Batched serving (DESIGN.md §6): ``--engine`` drives a mixed-size
 synthetic open-loop workload through the ``ServingEngine`` — power-of-two
 shape buckets, reduction-safe padding, one vmap dispatch per batch —
@@ -44,20 +54,26 @@ def serve_blas(args) -> dict:
     process) is served from it, and each request dispatches exactly one
     jitted call."""
     from repro.blas import REGISTRY, make_inputs
-    from repro.core import FusionCompiler, PlanCache
+    from repro.core import V5E, FusionCompiler, PlanCache
 
     if args.blas not in REGISTRY:
         raise SystemExit(f"unknown sequence {args.blas!r}; "
                          f"choose from {', '.join(REGISTRY)}")
     seq = REGISTRY[args.blas]
     cache = PlanCache()
-    cc = FusionCompiler(cache=cache)
+    mode = "autotune" if args.autotune else "best"
+    # calibrated constants make the predicted candidate ordering (which
+    # the autotune budget is spent on) meaningful off-TPU
+    hw = "calibrate" if args.autotune else V5E
+    cc = FusionCompiler(cache=cache, hw=hw, autotune_budget=args.budget)
 
     t0 = time.perf_counter()
-    prog = cc.compile(seq.script, seq.shapes(args.n))
+    prog = cc.compile(seq.script, seq.shapes(args.n), mode=mode)
     t_compile = time.perf_counter() - t0
+    if args.autotune and cc.last_autotune is not None:
+        print(cc.last_autotune.describe())
     t0 = time.perf_counter()
-    cc.compile(seq.script, seq.shapes(args.n))   # warm worker: cache hit
+    cc.compile(seq.script, seq.shapes(args.n), mode=mode)  # warm: cache hit
     t_recompile = time.perf_counter() - t0
 
     inputs = make_inputs(seq, args.n, seed=args.seed)
@@ -86,6 +102,7 @@ def serve_engine(args) -> dict:
     """Mixed-size synthetic workload through the batched ServingEngine
     (``--sharded``: the mesh-sharded variant)."""
     from repro.blas import REGISTRY, make_inputs
+    from repro.core import FusionCompiler
     from repro.serving import ServingEngine, ShardedServingEngine
 
     names = [s.strip() for s in args.blas.split(",")]
@@ -98,14 +115,18 @@ def serve_engine(args) -> dict:
     else:
         sizes = [64, 100, 128] if args.quick else [256, 1000, 1024, 2048]
 
+    mode = "autotune" if args.autotune else "best"
+    cc = (FusionCompiler(hw="calibrate", autotune_budget=args.budget)
+          if args.autotune else None)
     if args.sharded:
-        engine = ShardedServingEngine(max_batch=args.max_batch,
-                                      min_bucket=min(64, min(sizes)))
+        engine = ShardedServingEngine(compiler=cc, max_batch=args.max_batch,
+                                      min_bucket=min(64, min(sizes)),
+                                      mode=mode)
         print(f"sharded engine: {engine.n_replicas} replicas, "
               f"max_batch {engine.max_batch}")
     else:
-        engine = ServingEngine(max_batch=args.max_batch,
-                               min_bucket=min(64, min(sizes)))
+        engine = ServingEngine(compiler=cc, max_batch=args.max_batch,
+                               min_bucket=min(64, min(sizes)), mode=mode)
     t0 = time.perf_counter()
     buckets = {nm: engine.warm(nm, sizes) for nm in names}
     t_warm = time.perf_counter() - t0
@@ -151,6 +172,14 @@ def main(argv=None):
     ap.add_argument("--sharded", action="store_true",
                     help="with --engine: shard dispatches over the "
                     "'data' axis of a replica mesh (DESIGN.md §7)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="compile with mode='autotune': measure the top "
+                    "--budget predicted combinations on a calibrated "
+                    "hardware model and serve the measured winner "
+                    "(DESIGN.md §8)")
+    ap.add_argument("--budget", type=int, default=8,
+                    help="autotune candidate budget (measurements per "
+                    "program on a cold cache)")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host CPU devices (sets XLA_FLAGS; "
                     "must run before jax initializes)")

@@ -163,6 +163,10 @@ class ServingEngine:
       min_bucket: floor of the power-of-two shape buckets.
       registry: ``{name: Sequence}`` of servable sequences (defaults to
         the paper's ``blas.REGISTRY``).
+      mode: search mode for bucket compiles (``"best"`` default;
+        ``"autotune"`` measures the compiler's ``autotune_budget`` top
+        candidates per bucket at warm/compile time — DESIGN.md §8 —
+        and serves the measured winner thereafter).
 
     Example::
 
@@ -174,13 +178,15 @@ class ServingEngine:
 
     def __init__(self, compiler: FusionCompiler | None = None,
                  max_batch: int = 8, min_bucket: int = 128,
-                 registry: Mapping[str, Any] | None = None):
+                 registry: Mapping[str, Any] | None = None,
+                 mode: str = "best"):
         if registry is None:
             from ..blas import REGISTRY
             registry = REGISTRY
         self.compiler = compiler or FusionCompiler()
         self.max_batch = max_batch
         self.min_bucket = min_bucket
+        self.mode = mode
         self.registry = registry
         self._programs: dict[tuple[str, int], BatchedProgram] = {}
         self._pad_values: dict[tuple[str, int], dict[str, float]] = {}
@@ -203,7 +209,7 @@ class ServingEngine:
             seq = self.registry[sequence]
             prog = self.compiler.compile_batched(
                 seq.script, seq.shapes(bucket), max_batch=self.max_batch,
-                bucket=f"{sequence}/{bucket}")
+                mode=self.mode, bucket=f"{sequence}/{bucket}")
             # pad analysis can reject the graph — cache only complete pairs
             self._pad_values[key] = input_pad_values(prog.graph)
             self._programs[key] = prog
@@ -414,15 +420,15 @@ class ShardedServingEngine(ServingEngine):
       mesh: mesh with the replica axis (default:
         ``launch.mesh.make_data_mesh()`` over all local devices).
       axis: replica axis name (default ``"data"``).
-      compiler, max_batch, min_bucket, registry: as ``ServingEngine``;
-        ``max_batch`` rounds up so it is ``n_replicas`` times a power
-        of two.
+      compiler, max_batch, min_bucket, registry, mode: as
+        ``ServingEngine``; ``max_batch`` rounds up so it is
+        ``n_replicas`` times a power of two.
     """
 
     def __init__(self, mesh=None, *, compiler: FusionCompiler | None = None,
                  max_batch: int = 8, min_bucket: int = 128,
                  registry: Mapping[str, Any] | None = None,
-                 axis: str = "data"):
+                 axis: str = "data", mode: str = "best"):
         from ..dist.sharding import mesh_axis_sizes
         if mesh is None:
             from ..launch.mesh import make_data_mesh
@@ -439,7 +445,8 @@ class ShardedServingEngine(ServingEngine):
             max(1, -(-max_batch // self.n_replicas)), max_batch)
         super().__init__(compiler=compiler,
                          max_batch=self.n_replicas * self.rows_cap,
-                         min_bucket=min_bucket, registry=registry)
+                         min_bucket=min_bucket, registry=registry,
+                         mode=mode)
         self.replica_rows = [0] * self.n_replicas
 
     def _get_program(self, sequence: str, bucket: int
@@ -453,7 +460,7 @@ class ShardedServingEngine(ServingEngine):
             prog = self.compiler.compile_sharded(
                 seq.script, seq.shapes(bucket), mesh=self.mesh,
                 axis=self.axis, max_batch=self.max_batch,
-                bucket=f"{sequence}/{bucket}")
+                mode=self.mode, bucket=f"{sequence}/{bucket}")
             self._pad_values[key] = input_pad_values(prog.graph)
             self._programs[key] = prog
         return prog, self._pad_values[key]

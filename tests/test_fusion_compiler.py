@@ -4,9 +4,11 @@ import numpy as np
 import pytest
 
 from repro.blas import REGISTRY, elementary_lib as lib
-from repro.core import (FusionCompiler, analyse_group, best_combination,
-                        build_space, enumerate_fusions, saves_traffic, trace,
-                        unfused_combination)
+from repro.core import (V5E, FusionCompiler, analyse_group, best_combination,
+                        build_space, enumerate_fusions, make_tensor_map,
+                        saves_traffic, trace, unfused_combination)
+from repro.core.predictor import (accumulable, cost_impl, enumerate_impls,
+                                  fusion_dtype, reduce_roots_of, var_streams)
 
 
 def _graph(name, n=256):
@@ -96,7 +98,154 @@ class TestVmemPruning:
     def test_footprint_bounded(self):
         g = _graph("GEMVER", n=1024)
         space = build_space(g)
-        from repro.core import V5E
         for impls in space.impls_by_fusion.values():
             for im in impls:
                 assert im.vmem_bytes <= V5E.vmem_bytes
+
+
+# ---------------------------------------------------------------------------
+# >= 3 iteration axes (bugfix: blocks_per_axis hardcoded sizes[0]/[1])
+# ---------------------------------------------------------------------------
+
+def _three_axis_graph(shape=(4, 8, 128)):
+    t3 = make_tensor_map("mul3", lambda x, y: x * y,
+                         in_axes=[(0, 1, 2), (0, 1, 2)], depth=3)
+
+    def script(g, a, b):
+        t = g.apply(t3, a, b, name="t")
+        return (g.apply(t3, t, a, name="o"),)
+
+    return script, {"a": shape, "b": shape}
+
+
+class TestThreeAxisImpls:
+    def test_enumerate_impls_no_indexerror(self):
+        """Regression: a 3-axis fusion crashed with IndexError because
+        the per-axis divisor lists only covered sizes[0]/sizes[1]."""
+        script, shapes = _three_axis_graph()
+        g = trace(script, shapes)
+        f = next(f for f in enumerate_fusions(g) if len(f.calls) == 2)
+        assert f.depth == 3
+        impls = enumerate_impls(f, g)
+        assert impls
+        sizes = dict(zip(f.axis_roots, f.axis_sizes))
+        for im in impls:
+            assert sorted(im.order) == sorted(f.axis_roots)
+            for r, b in zip(im.order, im.blocks):
+                assert sizes[r] % b == 0
+
+    def test_three_axis_end_to_end(self):
+        script, shapes = _three_axis_graph()
+        cc = FusionCompiler(cache=None)
+        prog = cc.compile(script, shapes)
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal(shapes["a"]).astype(np.float32)
+        b = rng.standard_normal(shapes["b"]).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(prog(a=a, b=b)),
+                                   (a * b) * a, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dtype-aware cost model (bugfix: f32 constants applied to every dtype)
+# ---------------------------------------------------------------------------
+
+class TestDtypeCostModel:
+    def test_min_tile_scales_with_itemsize(self):
+        assert V5E.min_tile_for(np.float32) == (8, 128)
+        assert V5E.min_tile_for(np.float16) == (16, 128)
+        assert V5E.min_tile_for(np.float64) == (4, 128)
+        assert V5E.min_tile_for(np.int8) == (32, 128)
+
+    def test_flops_scale_by_dtype(self):
+        assert V5E.flops_scale(np.float16) == 1.0
+        assert V5E.flops_scale(np.float32) == V5E.f32_scale
+        assert V5E.flops_scale(np.float64) == V5E.f32_scale / 2
+
+    def test_fusion_dtype_is_widest_stream(self):
+        seq = REGISTRY["VADD"]
+        g16 = trace(seq.script, seq.shapes(256), dtype=np.float16)
+        f = next(f for f in enumerate_fusions(g16) if len(f.calls) == 2)
+        assert fusion_dtype(f) == np.float16
+
+    def test_cost_tracks_itemsize(self):
+        """Halving the itemsize halves traffic and (for a sub-4-byte
+        dtype) doubles the modelled compute rate."""
+        seq = REGISTRY["VADD"]
+        impls = {}
+        for dt in (np.float32, np.float16):
+            g = trace(seq.script, seq.shapes(1 << 20), dtype=dt)
+            f = next(f for f in enumerate_fusions(g) if len(f.calls) == 2)
+            order, blocks = f.axis_roots, (1 << 20,)
+            impls[dt] = cost_impl(f, g, order, blocks, V5E)
+        assert impls[np.float32].traffic_bytes == pytest.approx(
+            2 * impls[np.float16].traffic_bytes)
+        assert impls[np.float32].t_compute == pytest.approx(
+            2 * impls[np.float16].t_compute)
+
+    def test_f32_unchanged(self):
+        """The dtype threading is a no-op for f32 — the seed constants
+        were f32's."""
+        g = _graph("BiCGK", n=512)
+        f = next(f for f in enumerate_fusions(g) if len(f.calls) == 2)
+        dt = fusion_dtype(f)
+        assert dt == np.float32
+        assert V5E.min_tile_for(dt) == V5E.min_tile
+        assert V5E.flops_scale(dt) == V5E.f32_scale
+
+
+# ---------------------------------------------------------------------------
+# traffic-model units: var_streams / accumulable / partials
+# ---------------------------------------------------------------------------
+
+class TestTrafficModel:
+    def _bicgk_fusion(self, n=512):
+        g = _graph("BiCGK", n=n)
+        f = next(f for f in enumerate_fusions(g) if len(f.calls) == 2)
+        # q = A p reduces over j (q keeps axis i); s = A^T r over i
+        q = f.calls[0].out
+        i_root = g.axis_root(q.axis_ids[0])
+        j_root = next(r for r in f.axis_roots if r != i_root)
+        return g, f, i_root, j_root
+
+    def test_var_streams(self):
+        g, f, i, j = self._bicgk_fusion()
+        A, p, r = f.external_inputs
+        grid = (4, 4)                       # blocks (128, 128) on n=512
+        # A is indexed by both axes: streamed once either way
+        assert var_streams(A, g, (i, j), grid) == 1
+        assert var_streams(A, g, (j, i), grid) == 1
+        # p is indexed by j only: re-fetched per i-step when i is outer
+        assert var_streams(p, g, (i, j), grid) == grid[0]
+        assert var_streams(p, g, (j, i), grid) == 1
+        # r is indexed by i only: the mirror image
+        assert var_streams(r, g, (i, j), grid) == 1
+        assert var_streams(r, g, (j, i), grid) == grid[0]
+
+    def test_accumulable(self):
+        g, f, i, j = self._bicgk_fusion()
+        q, s = f.outputs
+        assert set(reduce_roots_of(q, f, g)) == {j}
+        assert set(reduce_roots_of(s, f, g)) == {i}
+        # an output accumulates iff its reduce axes are innermost
+        assert accumulable(q, f, g, (i, j))
+        assert not accumulable(q, f, g, (j, i))
+        assert accumulable(s, f, g, (j, i))
+        assert not accumulable(s, f, g, (i, j))
+
+    def test_partials_traffic_formula(self):
+        """cost_impl charges an accumulable output one write and a
+        partials output 2*nparts+1 (write parts, read parts, write
+        final) — lock the whole traffic sum for one concrete impl."""
+        n = 512
+        g, f, i, j = self._bicgk_fusion(n)
+        A, p, r = f.external_inputs
+        q, s = f.outputs
+        blocks = (128, 128)
+        im = cost_impl(f, g, (i, j), blocks, V5E)
+        grid = (n // 128, n // 128)
+        expected = (A.nbytes                       # both axes: once
+                    + p.nbytes * grid[0]           # j-only, i outer
+                    + r.nbytes                     # i-only, i outer
+                    + q.nbytes                     # accumulable (j inner)
+                    + s.nbytes * (2 * grid[0] + 1))  # partials over i
+        assert im.traffic_bytes == pytest.approx(expected)
