@@ -4,6 +4,16 @@ loop on the same mixed-size workload, plus — with a multi-device mesh —
 the shard_map-sharded engine (DESIGN.md §7).  Writes
 ``BENCH_serving.json``.
 
+The ``engine`` series packs cross-sequence batches into multi-graph
+dispatches (DESIGN.md §9, ``max_pack=8``).  ``packed_vs_unpacked``
+compares packed vs ``max_pack=1`` engines on the regime packing
+targets — mixed traffic over ALL registry sequences at small/medium
+sizes, where per-dispatch overhead is a real fraction of serve time
+(the main series' large buckets are bandwidth-bound and packing is
+neutral there) — reporting the dispatch-count reduction, the
+requests/sec speedup, and whether the two paths' outputs are bitwise
+equal (they must be).
+
     PYTHONPATH=src python -m benchmarks.serving [--quick] [--emit-json [PATH]]
     PYTHONPATH=src python -m benchmarks.serving --devices 8 --emit-json
 
@@ -23,9 +33,13 @@ Timing hardening: after warming, the process holds ~100k live objects
 (jax traces), so one cyclic-GC full pass costs tens of ms — longer than
 a whole serve pass.  Whether that pass lands inside the timed window is
 an allocation-count accident (measured: a 6x swing from inert code
-changes).  Each serve is therefore timed as the best of ``REPS`` runs
-with ``gc.collect()`` flushed before each, the same min-of-batches
-discipline BENCH_fusion uses.
+changes), and because ``gc.collect()`` resets the allocation counters,
+a pass that allocates past the gen-2 threshold re-triggers it on EVERY
+rep identically — min-of-reps alone can't escape.  Each serve is
+therefore timed as the best of ``REPS`` runs with ``gc.collect()``
+flushed before and the collector disabled during each window
+(re-enabled after), the same min-of-batches discipline BENCH_fusion
+uses plus standard benchmark GC hygiene.
 """
 from __future__ import annotations
 
@@ -37,17 +51,30 @@ import time
 import numpy as np
 
 REPS = 3
+WARMUP_PASSES = 5     # untimed serve passes before timing (see _run_with)
+PASSES = REPS + WARMUP_PASSES   # total per-engine passes, for counters
 
 
 def _best_serve(run_once):
-    """Best-of-REPS timed runs of ``run_once`` (GC flushed before each);
-    returns (t_best, results_of_best)."""
+    """Best-of-REPS timed runs of ``run_once``; GC flushed before and
+    DISABLED during each window; returns (t_best, results_of_best).
+
+    Disabling matters, not just flushing: collect() resets the
+    allocation counters, so a pass that allocates past the gen-2
+    threshold (~70k objects — the 11-sequence packed workload does)
+    would trigger a full collection INSIDE the window on every rep
+    identically, and min-of-reps can't average away a deterministic
+    10x hit."""
     best_t, best_r = None, None
     for _ in range(REPS):
         gc.collect()
-        t0 = time.perf_counter()
-        results = run_once()
-        t = time.perf_counter() - t0
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            results = run_once()
+            t = time.perf_counter() - t0
+        finally:
+            gc.enable()
         if best_t is None or t < best_t:
             best_t, best_r = t, results
     return best_t, best_r
@@ -67,11 +94,23 @@ def build_workload(sequences, sizes, n_requests, seed=0):
 
 
 def _run_with(engine, workload, sequences, sizes):
-    """Warm, best-of-REPS serve, and the engine-independent stats."""
+    """Warm, best-of-REPS serve, and the engine-independent stats.
+
+    ``warm()``/``warm_packs()`` pre-trace the predictable shapes, but a
+    drain can still form pack compositions warm can't predict (uneven
+    per-key unit counts — DESIGN.md §9 open edge), and a freshly built
+    XLA:CPU executable takes a few executions to reach steady state
+    (measured: 1260 → 28 → 9 → 6 ms over the first passes of a packed
+    program).  ``WARMUP_PASSES`` untimed serve passes absorb both
+    before the timed reps; ``PASSES`` normalizes the cumulative
+    dispatch counters back to per-pass."""
     t0 = time.perf_counter()
     for name in sequences:
-        engine.warm(name, sizes)
+        engine.warm(name, sizes, trace_packs=False)
+    engine.warm_packs()     # once, over the full warmed key set
     t_warm = time.perf_counter() - t0
+    for _ in range(WARMUP_PASSES):   # untimed (see docstring)
+        engine.serve(workload)
 
     t_serve, results = _best_serve(lambda: engine.serve(workload))
     lat = np.sort([r.latency_s for r in results])
@@ -81,16 +120,21 @@ def _run_with(engine, workload, sequences, sizes):
         "t_serve_s": t_serve, "t_warm_s": t_warm,
         "p50_ms": float(lat[len(lat) // 2]) * 1e3,
         "p99_ms": float(lat[min(len(lat) - 1, int(len(lat) * 0.99))]) * 1e3,
-        "n_dispatches": stats["n_dispatches"] // REPS,   # per serve pass
+        "n_dispatches": stats["n_dispatches"] // PASSES,   # per serve pass
         "batch_occupancy": stats["batch_occupancy"],
     }, results, stats
 
 
-def run_engine(workload, sequences, sizes, max_batch=8) -> dict:
+def run_engine(workload, sequences, sizes, max_batch=8, max_pack=8) -> dict:
     from repro.serving import ServingEngine
-    engine = ServingEngine(max_batch=max_batch, min_bucket=min(sizes))
+    engine = ServingEngine(max_batch=max_batch, min_bucket=min(sizes),
+                           max_pack=max_pack)
     out, results, stats = _run_with(engine, workload, sequences, sizes)
     out |= {"n_programs": len(stats["programs"]),
+            "max_pack": max_pack,
+            "n_packed_dispatches": stats["n_packed_dispatches"] // PASSES,
+            "n_packed_members": stats["n_packed_members"] // PASSES,
+            "queue_wait": stats["queue_wait"],
             "bucket_stats": stats["cache"]["buckets"]}
     return out, results
 
@@ -102,7 +146,7 @@ def run_sharded(workload, sequences, sizes, max_batch=8) -> dict:
     engine = ShardedServingEngine(max_batch=max_batch, min_bucket=min(sizes))
     out, results, stats = _run_with(engine, workload, sequences, sizes)
     out |= {"n_replicas": stats["n_replicas"],
-            "replica_rows": [r // REPS for r in stats["replica_rows"]],
+            "replica_rows": [r // PASSES for r in stats["replica_rows"]],
             "max_batch": engine.max_batch}
     return out, results
 
@@ -154,6 +198,47 @@ def verify(workload, results) -> bool:
     return True
 
 
+def bitwise_equal(results_a, results_b) -> bool:
+    """Every output of every request identical (by rid order) between
+    two serve passes — the packed path's correctness bar."""
+    a = sorted(results_a, key=lambda r: r.rid)
+    b = sorted(results_b, key=lambda r: r.rid)
+    return (len(a) == len(b) and all(
+        len(x.outputs) == len(y.outputs)
+        and all(np.array_equal(p, q) for p, q in zip(x.outputs, y.outputs))
+        for x, y in zip(a, b)))
+
+
+PACK_SIZES = (64, 100, 128)      # dispatch-overhead-bound buckets
+
+
+def run_packed_comparison(n_requests=128, max_batch=8, seed=0) -> dict:
+    """Packed (max_pack=8) vs unpacked (max_pack=1) engines on mixed
+    traffic over every registry sequence at the ``PACK_SIZES`` buckets
+    — the dispatch-bound regime §9 packing targets."""
+    from repro.blas import REGISTRY
+    sequences, sizes = tuple(REGISTRY), PACK_SIZES
+    workload = build_workload(sequences, sizes, n_requests, seed)
+    packed, presults = run_engine(workload, sequences, sizes, max_batch)
+    unpacked, uresults = run_engine(workload, sequences, sizes, max_batch,
+                                    max_pack=1)
+    return {
+        "n_requests": n_requests, "sizes": list(sizes),
+        "sequences": list(sequences),
+        "packed_dispatches": packed["n_dispatches"],
+        "n_packed_dispatches": packed["n_packed_dispatches"],
+        "unpacked_dispatches": unpacked["n_dispatches"],
+        "dispatch_reduction": (unpacked["n_dispatches"]
+                               / max(packed["n_dispatches"], 1)),
+        "throughput_packed_rps": packed["throughput_rps"],
+        "throughput_unpacked_rps": unpacked["throughput_rps"],
+        "speedup_rps": packed["throughput_rps"] / unpacked["throughput_rps"],
+        "queue_wait": packed["queue_wait"],
+        "verified": verify(workload, presults),
+        "bitwise_equal": bitwise_equal(presults, uresults),
+    }
+
+
 def run_all(n_requests=128, sizes=SIZES, sequences=SEQUENCES, max_batch=8,
             seed=0, sharded=False) -> dict:
     workload = build_workload(sequences, sizes, n_requests, seed)
@@ -165,6 +250,8 @@ def run_all(n_requests=128, sizes=SIZES, sequences=SEQUENCES, max_batch=8,
         "verified": verify(workload, results),
         "engine": engine, "baseline": baseline,
         "speedup_rps": engine["throughput_rps"] / baseline["throughput_rps"],
+        "packed_vs_unpacked": run_packed_comparison(
+            n_requests=n_requests, max_batch=max_batch, seed=seed),
     }
     if sharded:
         shd, sresults = run_sharded(workload, sequences, sizes, max_batch)
@@ -204,6 +291,13 @@ def main():
     print(f"  baseline: {r['baseline']['throughput_rps']:10.1f} req/s  "
           f"{r['baseline']['n_dispatches']} dispatches")
     print(f"  speedup:  {r['speedup_rps']:.2f}x requests/sec")
+    p = r["packed_vs_unpacked"]
+    print(f"  packed vs unpacked ({len(p['sequences'])} sequences, "
+          f"{p['n_requests']} requests, sizes {p['sizes']}): "
+          f"{p['unpacked_dispatches']} -> {p['packed_dispatches']} "
+          f"dispatches ({p['dispatch_reduction']:.2f}x fewer), "
+          f"{p['speedup_rps']:.2f}x requests/sec, "
+          f"bitwise_equal={p['bitwise_equal']}")
     if "sharded" in r:
         s = r["sharded"]
         print(f"  sharded:  {s['throughput_rps']:10.1f} req/s  "

@@ -3,14 +3,17 @@ map/reduce elementary functions (Filipovič et al., 2013)."""
 from .autotune import (AutotuneReport, CandidateTiming, autotune_combination,
                        calibrate_hardware, measure_program, synthetic_inputs)
 from .cache import BucketStats, CacheStats, PlanCache, default_cache
-from .codegen import BatchedProgram, CompiledProgram
+from .codegen import (BatchedProgram, CompiledProgram, PackedDispatch,
+                      PackedProgram, compile_plan_packed)
 from .compiler import MODES, CompileReport, FusionCompiler
 from .elementary import (ArgSpec, Elementary, Kind, Monoid, make_map,
                          make_nested_map, make_nested_map_reduce, make_reduce,
                          make_tensor_map)
 from .fusion import Fusion, analyse_group, enumerate_fusions, saves_traffic
 from .graph import CallNode, Graph, Var, trace
-from .plan import ExecutionPlan, GroupPlan, build_plan, graph_signature
+from .plan import (ExecutionPlan, GroupPlan, PackedPlan, build_packed_plan,
+                   build_plan, canonical_pack_order, graph_signature,
+                   pack_signature, plan_fingerprint)
 from .predictor import V5E, HardwareModel, Impl, enumerate_impls
 from .scheduler import (Combination, OptimizationSpace, best_combination,
                         build_space, enumerate_combinations,
@@ -23,9 +26,12 @@ __all__ = [
     "Combination", "CompileReport", "CompiledProgram",
     "Elementary", "ExecutionPlan", "Fusion", "FusionCompiler", "Graph",
     "GroupPlan", "HardwareModel", "Impl", "Kind", "MODES", "Monoid",
-    "OptimizationSpace", "PlanCache", "V5E", "Var", "analyse_group",
-    "autotune_combination", "best_combination", "build_plan", "build_space",
-    "calibrate_hardware", "default_cache",
+    "OptimizationSpace", "PackedDispatch", "PackedPlan", "PackedProgram",
+    "PlanCache", "V5E", "Var", "analyse_group",
+    "autotune_combination", "best_combination", "build_packed_plan",
+    "build_plan", "build_space",
+    "calibrate_hardware", "canonical_pack_order", "compile_plan_packed",
+    "default_cache", "pack_signature", "plan_fingerprint",
     "enumerate_combinations", "enumerate_fusions", "enumerate_impls",
     "exhaustive_best_combination", "graph_signature", "iter_combinations",
     "make_map", "make_nested_map", "make_nested_map_reduce", "make_reduce",

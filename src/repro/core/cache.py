@@ -14,6 +14,13 @@ compiler:
   combination search (the expensive stages); codegen re-binds the plan
   to the fresh trace.  The disk layer survives process restarts: set
   ``REPRO_PLAN_CACHE_DIR`` or pass ``disk_dir``.
+* **packed-plan layer** (in-memory LRU + the same on-disk machinery,
+  ``*.pack.json``) — maps a pack key (sorted member-plan fingerprints +
+  config) to a serialized ``PackedPlan`` (DESIGN.md §9): the member
+  concatenation a multi-graph program is codegenned from.  Derivable
+  from the member plan entries, but one file round-trips the whole
+  pack, and the key's order-independence is what makes a drain cycle
+  hitting the same sequence mix — in any order — a hit.
 * **measurement layer** (in-memory LRU + the same on-disk machinery) —
   maps a measured-cost key (graph signature, combination key, hardware/
   backend fingerprint — computed by ``core.autotune``) to one empirical
@@ -51,9 +58,13 @@ import tempfile
 import time
 from typing import Any
 
-from .plan import ExecutionPlan
+from .plan import ExecutionPlan, PackedPlan
 
 _ENV_DIR = "REPRO_PLAN_CACHE_DIR"
+
+#: window for queue-wait percentiles: big enough for stable p99 on a
+#: serving pass, bounded so a long-lived engine never grows unboundedly
+_QUEUE_WAIT_WINDOW = 4096
 
 
 @dataclasses.dataclass
@@ -79,7 +90,16 @@ class CacheStats:
     meas_misses: int = 0
     meas_disk_hits: int = 0
     meas_writes: int = 0
+    pack_hits: int = 0
+    pack_misses: int = 0
+    pack_disk_hits: int = 0
+    pack_writes: int = 0
     buckets: dict[str, BucketStats] = dataclasses.field(default_factory=dict)
+    # submit→dispatch wait per request (serving engine, DESIGN.md §9
+    # telemetry): a bounded window of recent samples for percentiles
+    queue_waits: list = dataclasses.field(default_factory=list)
+    queue_wait_count: int = 0
+    queue_wait_total_s: float = 0.0
 
     def record_bucket(self, label: str, *, hit: bool, seconds: float = 0.0):
         b = self.buckets.setdefault(label, BucketStats())
@@ -90,8 +110,29 @@ class CacheStats:
             b.misses += 1
             b.t_compile_s += seconds
 
+    def record_queue_wait(self, seconds: float):
+        """One request's submit→dispatch wait.  Keeps a bounded window
+        of recent samples (percentiles) plus lifetime count/total."""
+        self.queue_wait_count += 1
+        self.queue_wait_total_s += seconds
+        self.queue_waits.append(seconds)
+        if len(self.queue_waits) > _QUEUE_WAIT_WINDOW:
+            del self.queue_waits[:len(self.queue_waits) - _QUEUE_WAIT_WINDOW]
+
+    def queue_wait_percentiles(self) -> dict[str, float]:
+        """p50/p99 of the recent queue-wait window, in milliseconds."""
+        if not self.queue_waits:
+            return {"count": 0, "p50_ms": 0.0, "p99_ms": 0.0}
+        w = sorted(self.queue_waits)
+        return {"count": self.queue_wait_count,
+                "p50_ms": w[len(w) // 2] * 1e3,
+                "p99_ms": w[min(len(w) - 1, int(len(w) * 0.99))] * 1e3}
+
     def as_dict(self) -> dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        del d["queue_waits"]               # summarize, don't dump the window
+        d["queue_wait"] = self.queue_wait_percentiles()
+        return d
 
 
 class _LRU:
@@ -125,6 +166,7 @@ class PlanCache:
     def __init__(self, capacity: int = 256, disk_dir: str | None = None):
         self._programs = _LRU(capacity)
         self._plans = _LRU(capacity)
+        self._packs = _LRU(capacity)
         # measurement records are tiny and an autotune pass produces
         # `budget` of them per graph — give the layer headroom
         self._measurements = _LRU(capacity * 8)
@@ -228,6 +270,47 @@ class PlanCache:
         if path and self._publish(path, plan.to_json()):
             self.stats.disk_writes += 1
 
+    # -- packed-plan layer (multi-graph programs, DESIGN.md §9) --------------
+    def _pack_path(self, key: str) -> str | None:
+        if not self.disk_dir:
+            return None
+        return os.path.join(self.disk_dir, f"{key}.pack.json")
+
+    def get_packed_plan(self, key: str) -> PackedPlan | None:
+        """Packed plans ride the plan layer's machinery (same LRU
+        budget-class, same atomic disk protocol, ``*.pack.json``).  A
+        hit means the member concatenation — offsets, merged routing
+        and all member plans inline — comes back without consulting N
+        individual plan entries."""
+        packed = self._packs.get(key)
+        if packed is not None:
+            self.stats.pack_hits += 1
+            return packed
+        path = self._pack_path(key)
+        if path and os.path.exists(path):
+            try:
+                with open(path) as f:
+                    packed = PackedPlan.from_json(f.read())
+            except (OSError, ValueError):
+                packed = None     # stale/corrupt: drop so put can republish
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+            if packed is not None:
+                self.stats.pack_hits += 1
+                self.stats.pack_disk_hits += 1
+                self._packs.put(key, packed)
+                return packed
+        self.stats.pack_misses += 1
+        return None
+
+    def put_packed_plan(self, key: str, packed: PackedPlan):
+        self._packs.put(key, packed)
+        path = self._pack_path(key)
+        if path and self._publish(path, packed.to_json()):
+            self.stats.pack_writes += 1
+
     # -- measurement layer (autotune measured costs, DESIGN.md §8) -----------
     def _meas_path(self, key: str) -> str | None:
         if not self.disk_dir:
@@ -292,6 +375,7 @@ class PlanCache:
     def clear(self):
         self._programs.clear()
         self._plans.clear()
+        self._packs.clear()
         self._measurements.clear()
         self.stats = CacheStats()
 

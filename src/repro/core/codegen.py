@@ -27,12 +27,19 @@ path).  On the ``jnp`` backend an ``optimization_barrier`` between
 groups keeps XLA from fusing across the compiler's chosen kernel
 boundaries, so the fused/unfused comparison stays meaningful; on the
 ``pallas`` backend each group is one opaque ``pallas_call`` anyway.
+
+Multi-graph programs (DESIGN.md §9): ``compile_plan_packed`` emits ONE
+jitted dispatch over several member graphs — the members' disjoint
+routing tables merged by offset rebasing, each member's groups kept as
+separate sub-functions (fusion decisions preserved), member boundaries
+fenced with ``optimization_barrier`` so the packed path stays
+bitwise-equal to the unpacked one.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +49,7 @@ from jax.experimental import pallas as pl
 from .elementary import Monoid
 from .fusion import Fusion
 from .graph import Graph, Var
-from .plan import ExecutionPlan, build_plan
+from .plan import ExecutionPlan, PackedPlan, build_plan
 from .predictor import V5E, HardwareModel, Impl, accumulable, reduce_roots_of
 from .scheduler import Combination
 
@@ -351,6 +358,167 @@ def compile_plan_batched(g: Graph, plan: ExecutionPlan, max_batch: int = 8,
     return BatchedProgram(graph=g, plan=plan, max_batch=max_batch,
                           fn=jax.jit(batched) if jit else batched,
                           raw_fn=batched)
+
+
+# ---------------------------------------------------------------------------
+# packed multi-graph programs (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedProgram:
+    """One jitted dispatch over SEVERAL member graphs (DESIGN.md §9) —
+    the cross-sequence horizontal fusion of a mixed serving drain.
+
+    Members are in the pack's canonical order.  Every member input is
+    batched (leading batch axis, scalars as ``(b,)``); members may
+    carry *different* batch sizes — jit re-traces per distinct shape
+    mix, so callers should quantize (the serving engine packs equal
+    batch-size classes).  Outputs come back per member, batched,
+    bitwise-equal to what each member's own ``BatchedProgram`` would
+    produce: inter-member ``optimization_barrier``s keep XLA from
+    fusing across pack members, so each member's compiled form is the
+    unpacked one."""
+
+    graphs: tuple[Graph, ...]
+    packed: PackedPlan
+    member_impls: tuple[tuple[Impl, ...], ...]
+    max_batch: int
+    fn: Callable             # jitted (*concat inputs) -> tuple(concat outputs)
+
+    @property
+    def n_members(self) -> int:
+        return self.packed.n_members
+
+    @property
+    def n_groups(self) -> int:
+        return sum(len(p.groups) for p in self.packed.members)
+
+    def gather(self, member_inputs: Sequence) -> list:
+        """Concatenated positional args from per-member input dicts
+        (canonical member order)."""
+        if len(member_inputs) != self.n_members:
+            raise ValueError(f"pack has {self.n_members} members, "
+                             f"got {len(member_inputs)} input dicts")
+        args = []
+        for p, inputs in zip(self.packed.members, member_inputs):
+            args.extend(_gather_args(p, dict(inputs)))
+        return args
+
+    def split(self, outs: tuple) -> list[tuple]:
+        """Concatenated outputs -> one tuple per member."""
+        offs = self.packed.output_offsets + (self.packed.n_outputs,)
+        return [tuple(outs[offs[m]:offs[m + 1]])
+                for m in range(self.n_members)]
+
+    def __call__(self, member_inputs: Sequence) -> list[tuple]:
+        return self.split(self.fn(*self.gather(member_inputs)))
+
+    def block_until_ready(self, result):
+        return jax.tree_util.tree_map(
+            lambda x: x.block_until_ready()
+            if hasattr(x, "block_until_ready") else x, result)
+
+
+@dataclasses.dataclass
+class PackedDispatch:
+    """Caller-order view of a (cached, canonical-order) PackedProgram.
+
+    ``compile_packed`` returns one of these per call: the heavy
+    ``PackedProgram`` is shared through the program cache keyed on the
+    sorted member fingerprints, while ``perm`` records how THIS
+    caller's member order maps onto the canonical order — so a drain
+    cycle that sees the same sequence mix in a different arrival order
+    reuses the program and only the thin permutation differs."""
+
+    program: PackedProgram
+    perm: tuple[int, ...]          # perm[k] = caller index of canonical k
+
+    @property
+    def n_members(self) -> int:
+        return self.program.n_members
+
+    def __call__(self, member_inputs: Sequence) -> list[tuple]:
+        """Run the pack: ``member_inputs[i]`` is member *i*'s input
+        dict in the caller's order; returns per-member output tuples in
+        the same order."""
+        canon = self.program([member_inputs[i] for i in self.perm])
+        outs: list = [None] * len(self.perm)
+        for k, i in enumerate(self.perm):
+            outs[i] = canon[k]
+        return outs
+
+    def block_until_ready(self, result):
+        return self.program.block_until_ready(result)
+
+
+def _packed_program_fn(packed: PackedPlan, fns: list[Callable],
+                       backend: str) -> Callable:
+    """The whole pack as one pure function over concatenated batched
+    inputs: the members' disjoint routing tables merged by offset
+    rebasing (``PackedPlan.merged_groups``), each group vmap-lifted
+    over its member's batch axis.
+
+    Barrier policy: member boundaries get an ``optimization_barrier``
+    (jnp backend, >1 member) so XLA cannot fuse across pack members —
+    each member's compiled form stays the unpacked ``BatchedProgram``
+    one, which is what makes the packed path bitwise-equal to the
+    unpacked path.  *Within* a member the batched convention applies
+    (no inter-group barriers, as in ``compile_plan_batched``)."""
+    flat = packed.merged_groups()
+    out_refs = packed.merged_outputs()
+    member_of_group = [m for m, _ in flat]
+    batched_fns = [jax.vmap(fn) for fn in fns]
+
+    def read(ref, input_vals, group_outs):
+        if ref[0] == "input":
+            return input_vals[ref[1]]
+        return group_outs[ref[1]][ref[2]]
+
+    def program(*input_vals):
+        group_outs: list[tuple] = []
+        for (m, gp), fn in zip(flat, batched_fns):
+            outs = fn(*[read(r, input_vals, group_outs) for r in gp.inputs])
+            # member boundary barrier: the last group of each member
+            # fences its outputs so XLA keeps pack members' kernels
+            # independent (bitwise parity with the unpacked path)
+            gi = len(group_outs)
+            last_of_member = (gi + 1 == len(flat)
+                              or member_of_group[gi + 1] != m)
+            if (last_of_member and backend == "jnp"
+                    and packed.n_members > 1):
+                outs = jax.lax.optimization_barrier(outs)
+            group_outs.append(outs)
+        return tuple(read(r, input_vals, group_outs) for r in out_refs)
+
+    program.__name__ = "packed_" + packed.signature[:8]
+    return program
+
+
+def compile_plan_packed(graphs: Sequence[Graph], packed: PackedPlan,
+                        max_batch: int = 8, hw: HardwareModel = V5E,
+                        interpret: bool = True, jit: bool = True
+                        ) -> PackedProgram:
+    """PackedPlan -> executable: ONE jitted whole-program function over
+    N member graphs (DESIGN.md §9).
+
+    ``graphs`` must align with ``packed.members`` (canonical order);
+    each member plan binds to its graph exactly as in ``compile_plan``,
+    so per-graph fusion decisions are preserved — the pack only merges
+    the dispatch."""
+    if len(graphs) != packed.n_members:
+        raise ValueError(f"pack has {packed.n_members} members, "
+                         f"got {len(graphs)} graphs")
+    member_impls, fns = [], []
+    for g, plan in zip(graphs, packed.members):
+        impls = plan.bind(g, hw)
+        member_impls.append(tuple(impls))
+        fns.extend(_group_fns(g, plan, impls, interpret))
+    program = _packed_program_fn(packed, fns, packed.members[0].backend
+                                 if packed.members else "jnp")
+    return PackedProgram(graphs=tuple(graphs), packed=packed,
+                         member_impls=tuple(member_impls),
+                         max_batch=max_batch,
+                         fn=jax.jit(program) if jit else program)
 
 
 def compile_combination(g: Graph, combo: Combination, backend: str = "jnp",

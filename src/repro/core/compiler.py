@@ -28,7 +28,8 @@ import numpy as np
 
 from . import autotune, codegen, graph, scheduler
 from .cache import PlanCache, default_cache
-from .plan import build_plan, graph_signature
+from .plan import (build_packed_plan, build_plan, canonical_pack_order,
+                   graph_signature, pack_signature, plan_fingerprint)
 from .predictor import V5E, HardwareModel
 from .scheduler import Combination, OptimizationSpace
 
@@ -381,6 +382,99 @@ class FusionCompiler:
             cache.stats.record_bucket(
                 bucket, hit=False, seconds=time.perf_counter() - t0)
         return prog
+
+    def compile_packed(self, members, max_batch: int = 8, mode: str = "best",
+                       backend: str | None = None, bucket: str | None = None
+                       ) -> codegen.PackedDispatch:
+        """Multi-graph packed compile (DESIGN.md §9): N member scripts
+        become ONE jitted dispatch — the cross-sequence horizontal
+        fusion a mixed serving drain needs.
+
+        Args:
+          members: sequence of ``(script, input_shapes)`` pairs, one
+            per pack member.  Each member runs the normal per-graph
+            pipeline (trace → plan, sharing the plan cache with every
+            other entry point), so its fusion decisions are exactly
+            the unpacked ones; only the dispatch is merged.
+          max_batch, mode, backend: as :meth:`compile_batched`; every
+            member input is batched, and members may carry different
+            batch sizes at call time.
+          bucket: label for ``cache.stats.buckets`` telemetry
+            (defaults to a ``pack/``-prefixed member list).
+
+        Returns:
+          A ``codegen.PackedDispatch`` — a thin caller-order view over
+          the cached canonical ``PackedProgram``.  Program and packed-
+          plan layers are keyed on the *sorted* member plan
+          fingerprints, so any compile of the same member mix — in any
+          order, any process via the disk layer — is a cache hit; only
+          the permutation is rebuilt.
+
+        Raises:
+          ValueError: empty member list, or as :meth:`compile` per
+            member.
+
+        Example::
+
+            axpy, vadd = REGISTRY["AXPYDOT"], REGISTRY["VADD"]
+            pack = cc.compile_packed([(axpy.script, axpy.shapes(256)),
+                                      (vadd.script, vadd.shapes(256))])
+            (z, r), (x,) = pack([axpy_batch, vadd_batch])  # ONE dispatch
+        """
+        if not members:
+            raise ValueError("compile_packed needs at least one member")
+        backend = backend or self.backend
+        mode_key = self._mode_key(mode)
+        t0 = time.perf_counter()
+        cache = self.cache
+
+        graphs, plans = [], []
+        for script, input_shapes in members:
+            g = self.trace(script, input_shapes)
+            plans.append(self._plan_for(g, mode, backend, mode_key))
+            graphs.append(g)
+        self._autotune_prog = None   # packed codegen never reuses the handoff
+
+        perm = canonical_pack_order(plans)
+        sorted_graphs = [graphs[i] for i in perm]
+        sorted_plans = [plans[i] for i in perm]
+        psig = pack_signature([plan_fingerprint(p) for p in plans])
+        config = self._config_key(backend, mode_key)
+        bucket = bucket or f"pack/{psig[:12]}"
+
+        prog = pkey = None
+        if cache is not None:
+            pkey = hashlib.sha256(
+                repr((psig, config, ("packed", max_batch))).encode()
+            ).hexdigest()
+            prog = cache.get_program(pkey)
+            if prog is not None:
+                cache.stats.record_bucket(
+                    bucket, hit=True, seconds=time.perf_counter() - t0)
+                return codegen.PackedDispatch(program=prog, perm=perm)
+
+        packed = None
+        if cache is not None:
+            pack_plan_key = hashlib.sha256(
+                repr((psig, config, "pack-plan")).encode()).hexdigest()
+            packed = cache.get_packed_plan(pack_plan_key)
+            if packed is not None and [plan_fingerprint(p)
+                                       for p in packed.members] != \
+                    [plan_fingerprint(p) for p in sorted_plans]:
+                packed = None         # foreign entry under our key: rebuild
+        if packed is None:
+            packed = build_packed_plan(plans)
+            if cache is not None:
+                cache.put_packed_plan(pack_plan_key, packed)
+        prog = codegen.compile_plan_packed(sorted_graphs, packed,
+                                           max_batch=max_batch, hw=self.hw,
+                                           interpret=self.interpret)
+        if cache is not None:
+            if pkey is not None:
+                cache.put_program(pkey, prog)
+            cache.stats.record_bucket(
+                bucket, hit=False, seconds=time.perf_counter() - t0)
+        return codegen.PackedDispatch(program=prog, perm=perm)
 
     def compile_sharded(self, script, input_shapes: dict[str, Sequence[int]],
                         mesh, axis: str = "data", max_batch: int = 8,

@@ -24,8 +24,10 @@ nothing.
 
 Batched serving (DESIGN.md §6): ``--engine`` drives a mixed-size
 synthetic open-loop workload through the ``ServingEngine`` — power-of-two
-shape buckets, reduction-safe padding, one vmap dispatch per batch —
-reporting throughput and p50/p99 latency.
+shape buckets, reduction-safe padding, one vmap dispatch per batch, and
+cross-sequence packed dispatch of a mixed drain (DESIGN.md §9,
+``--max-pack``) — reporting throughput, p50/p99 latency, and p50/p99
+queue wait.
 
     PYTHONPATH=src python -m repro.launch.serve --blas GEMVER --engine \
         --requests 64 --sizes 256,1000,1024,2048 --rate 200
@@ -119,6 +121,7 @@ def serve_engine(args) -> dict:
     cc = (FusionCompiler(hw="calibrate", autotune_budget=args.budget)
           if args.autotune else None)
     if args.sharded:
+        # sharded engine pins max_pack=1 (DESIGN.md §9 open edge)
         engine = ShardedServingEngine(compiler=cc, max_batch=args.max_batch,
                                       min_bucket=min(64, min(sizes)),
                                       mode=mode)
@@ -126,9 +129,13 @@ def serve_engine(args) -> dict:
               f"max_batch {engine.max_batch}")
     else:
         engine = ServingEngine(compiler=cc, max_batch=args.max_batch,
-                               min_bucket=min(64, min(sizes)), mode=mode)
+                               min_bucket=min(64, min(sizes)), mode=mode,
+                               max_pack=args.max_pack)
     t0 = time.perf_counter()
-    buckets = {nm: engine.warm(nm, sizes) for nm in names}
+    # warm packs once over the full key set, not per sequence
+    buckets = {nm: engine.warm(nm, sizes, trace_packs=False) for nm in names}
+    if not args.sharded:
+        engine.warm_packs()
     t_warm = time.perf_counter() - t0
 
     workload = []
@@ -152,6 +159,14 @@ def serve_engine(args) -> dict:
     print(f"  throughput {rps:.1f} req/s | latency p50 {p50*1e3:.2f} ms "
           f"p99 {p99*1e3:.2f} ms | {st['n_dispatches']} dispatches, "
           f"batch occupancy {st['batch_occupancy']:.2f}")
+    qw = st["queue_wait"]
+    if qw and qw["count"]:
+        print(f"  queue wait p50 {qw['p50_ms']:.2f} ms "
+              f"p99 {qw['p99_ms']:.2f} ms ({qw['count']} waits)")
+    if st["n_packed_dispatches"]:
+        print(f"  packed dispatches: {st['n_packed_dispatches']} carrying "
+              f"{st['n_packed_members']} member batches "
+              f"(max_pack {st['max_pack']})")
     print(f"  bucket stats: {st['cache']['buckets']}")
     if args.sharded:
         print(f"  replica rows: {st['replica_rows']}")
@@ -189,6 +204,10 @@ def main(argv=None):
                     "--engine (default 256,1000,1024,2048; --quick "
                     "shrinks them)")
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-pack", type=int, default=8,
+                    help="with --engine: most (sequence, bucket) batches "
+                    "merged into one packed dispatch per drain round "
+                    "(DESIGN.md §9; 1 disables packing)")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="open-loop arrival rate in req/s for --engine "
                     "(0 = closed loop)")

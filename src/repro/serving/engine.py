@@ -21,7 +21,15 @@ The engine takes ``(sequence, n, inputs)`` requests off a queue and:
 3. **groups** — same-``(sequence, bucket)`` requests form batches of up
    to ``max_batch`` (batch sizes rounded to powers of two to bound jit
    re-traces), executed by a ``BatchedProgram``;
-4. **overlaps** — all batches are dispatched before any result is
+4. **packs** — the per-``(sequence, bucket)`` batches pending in one
+   drain cycle are packed, equal batch-size classes together, into a
+   single *multi-graph* dispatch (``FusionCompiler.compile_packed``,
+   DESIGN.md §9): one jitted call executes several different sequences'
+   batches side by side, bitwise-equal to dispatching them separately.
+   ``max_pack`` bounds members per pack (1 disables packing); a key
+   whose program is still cold dispatches unpacked this cycle so the
+   pack trace never serializes behind a fresh member compile;
+5. **overlaps** — all batches are dispatched before any result is
    materialized, so host-side batch assembly of batch *k+1* runs while
    the device executes batch *k* (JAX async dispatch).
 
@@ -41,7 +49,7 @@ from typing import Any, Mapping, Sequence
 import numpy as np
 
 from ..core import FusionCompiler
-from ..core.codegen import BatchedProgram
+from ..core.codegen import BatchedProgram, PackedDispatch
 from ..core.elementary import Monoid
 from ..core.graph import Graph
 
@@ -51,9 +59,18 @@ from ..core.graph import Graph
 # ---------------------------------------------------------------------------
 
 def bucket_of(n: int, min_bucket: int = 128) -> int:
-    """Next power of two >= n, floored at ``min_bucket``."""
+    """Next power of two >= n, floored at ``min_bucket``.
+
+    ``min_bucket`` must itself be a power of two: a non-pow2 floor
+    would silently yield non-pow2 buckets (e.g. floor 100 → buckets
+    100, 200, 400 …), fragmenting the plan cache across nearby sizes
+    instead of collapsing them."""
     if n <= 0:
         raise ValueError(f"request size must be positive, got {n}")
+    if min_bucket < 1 or (min_bucket & (min_bucket - 1)):
+        raise ValueError(
+            f"min_bucket must be a power of two, got {min_bucket} "
+            "(valid form: 1, 2, 4, 8, ...)")
     b = min_bucket
     while b < n:
         b *= 2
@@ -146,6 +163,7 @@ class RequestResult:
     batch_size: int                # real requests in the dispatch
     outputs: tuple[np.ndarray, ...]  # sliced back to the request's n
     latency_s: float
+    queue_wait_s: float = 0.0      # submit -> dispatch wait
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +185,9 @@ class ServingEngine:
         ``"autotune"`` measures the compiler's ``autotune_budget`` top
         candidates per bucket at warm/compile time — DESIGN.md §8 —
         and serves the measured winner thereafter).
+      max_pack: most ``(sequence, bucket)`` batches merged into one
+        packed dispatch per drain round (DESIGN.md §9); ``1`` disables
+        packing and restores one dispatch per batch.
 
     Example::
 
@@ -179,23 +200,29 @@ class ServingEngine:
     def __init__(self, compiler: FusionCompiler | None = None,
                  max_batch: int = 8, min_bucket: int = 128,
                  registry: Mapping[str, Any] | None = None,
-                 mode: str = "best"):
+                 mode: str = "best", max_pack: int = 8):
         if registry is None:
             from ..blas import REGISTRY
             registry = REGISTRY
+        if max_pack < 1:
+            raise ValueError(f"max_pack must be >= 1, got {max_pack}")
         self.compiler = compiler or FusionCompiler()
         self.max_batch = max_batch
         self.min_bucket = min_bucket
         self.mode = mode
+        self.max_pack = max_pack
         self.registry = registry
         self._programs: dict[tuple[str, int], BatchedProgram] = {}
         self._pad_values: dict[tuple[str, int], dict[str, float]] = {}
+        self._packs: dict[tuple[tuple[str, int], ...], PackedDispatch] = {}
         self._queue: list[Request] = []
         self._rid = 0
         # engine-side telemetry (compile telemetry lives on cache.stats)
         self.n_requests = 0
         self.n_dispatches = 0
         self.n_padded_rows = 0     # dummy rows added by pow2 rounding
+        self.n_packed_dispatches = 0   # dispatches that were packs
+        self.n_packed_members = 0      # member batches those packs carried
 
     # -- compilation --------------------------------------------------------
     def bucket_of(self, n: int) -> int:
@@ -215,6 +242,55 @@ class ServingEngine:
             self._programs[key] = prog
         return prog, self._pad_values[key]
 
+    def _get_pack(self, members: tuple[tuple[str, int], ...]) -> PackedDispatch:
+        """Packed dispatch for an ordered tuple of (sequence, bucket)
+        member keys; memoized per exact member tuple (the compiler's
+        program cache additionally collapses reordered mixes)."""
+        dispatch = self._packs.get(members)
+        if dispatch is None:
+            dispatch = self.compiler.compile_packed(
+                [(self.registry[s].script, self.registry[s].shapes(b))
+                 for s, b in members],
+                max_batch=self.max_batch, mode=self.mode,
+                bucket="pack/" + "+".join(f"{s}/{b}" for s, b in members))
+            self._packs[members] = dispatch
+        return dispatch
+
+    def _form_packs(self, units: list, cold: set) -> tuple[list, list]:
+        """Split drain units — ``(key, chunk, batch)`` triples — into
+        packs (lists of >= 2 units sharing a batch-size class) and
+        leftovers dispatched unpacked.
+
+        Per batch class the formation is round-robin: one unit per
+        sorted ``(sequence, bucket)`` key per round, rounds chunked at
+        ``max_pack``.  Uniform traffic over the warmed key set thus
+        repeats ONE composition every round — the composition
+        ``warm()`` pre-traces.  Cold keys (``cold``) always dispatch
+        unpacked this cycle."""
+        if self.max_pack < 2:
+            return [], list(units)
+        singles = [u for u in units if u[0] in cold]
+        by_batch: dict[int, list] = {}
+        for u in units:
+            if u[0] not in cold:
+                by_batch.setdefault(u[2], []).append(u)
+        packs = []
+        for batch in sorted(by_batch):
+            fifo: dict[tuple[str, int], list] = {}
+            for u in by_batch[batch]:
+                fifo.setdefault(u[0], []).append(u)
+            while fifo:
+                rnd = [fifo[k].pop(0) for k in sorted(fifo)]
+                for k in [k for k, q in fifo.items() if not q]:
+                    del fifo[k]
+                for i in range(0, len(rnd), self.max_pack):
+                    part = rnd[i:i + self.max_pack]
+                    if len(part) >= 2:
+                        packs.append(part)
+                    else:
+                        singles.extend(part)
+        return packs, singles
+
     def _dispatch_batch(self, k: int) -> int:
         """Quantized dispatch size for ``k`` queued requests."""
         return _pow2_batch(k, self.max_batch)
@@ -232,11 +308,15 @@ class ServingEngine:
         of them real requests (subclasses track replica routing)."""
 
     def warm(self, sequence: str, ns: Sequence[int],
-             trace_batches: bool = True) -> list[int]:
+             trace_batches: bool = True,
+             trace_packs: bool = True) -> list[int]:
         """Pre-compile every bucket the sizes ``ns`` map to; returns the
         bucket list.  ``trace_batches`` additionally executes a dummy
         dispatch at every batch-size class ``drain`` can produce, so
-        serving never pays a jit trace either."""
+        serving never pays a jit trace either.  ``trace_packs`` does the
+        same for the packed dispatches a drain over ALL warmed keys
+        would form (re-run after the last ``warm`` call for full
+        coverage — the compositions depend on the whole warmed set)."""
         buckets = sorted({self.bucket_of(n) for n in ns})
         for b in buckets:
             prog, _ = self._get_program(sequence, b)
@@ -246,7 +326,37 @@ class ServingEngine:
                 dummy = {v.name: np.zeros((bs,) + v.shape, v.dtype)
                          for v in prog.graph.inputs}
                 prog.block_until_ready(prog(**dummy))
+        if trace_packs:
+            self.warm_packs(trace_batches=trace_batches)
         return buckets
+
+    def warm_packs(self, trace_batches: bool = True) -> list[tuple]:
+        """Pre-build the pack compositions a drain over every warmed
+        ``(sequence, bucket)`` key would form — sorted keys, chunked at
+        ``max_pack``, exactly ``_form_packs``'s round shape — and (with
+        ``trace_batches``) execute each at every batch-size class, so a
+        warmed engine serving mixed traffic over the warmed set never
+        jit-traces a pack on the hot path.  Returns the member tuples
+        warmed."""
+        if self.max_pack < 2:
+            return []
+        keys = sorted(self._programs)
+        warmed = []
+        for i in range(0, len(keys), self.max_pack):
+            members = tuple(keys[i:i + self.max_pack])
+            if len(members) < 2:
+                continue
+            dispatch = self._get_pack(members)
+            warmed.append(members)
+            if not trace_batches:
+                continue
+            for bs in self._trace_sizes():
+                member_inputs = [
+                    {v.name: np.zeros((bs,) + v.shape, v.dtype)
+                     for v in self._programs[key].graph.inputs}
+                    for key in members]
+                dispatch.block_until_ready(dispatch(member_inputs))
+        return warmed
 
     # -- request intake -----------------------------------------------------
     def submit(self, sequence: str, n: int, inputs: Mapping[str, Any],
@@ -278,14 +388,31 @@ class ServingEngine:
             out[name] = np.stack(rows)
         return out
 
+    def _record_waits(self, chunk: list[Request], t_disp: float) -> list[float]:
+        """Submit -> dispatch wait per request, mirrored into the cache
+        telemetry window (``CacheStats.queue_wait_percentiles``)."""
+        waits = [max(0.0, t_disp - r.t_submit) for r in chunk]
+        cache = self.compiler.cache
+        if cache is not None:
+            for w in waits:
+                cache.stats.record_queue_wait(w)
+        return waits
+
     def drain(self) -> list[RequestResult]:
         """Execute everything queued: group by (sequence, bucket), chunk
-        into batches, dispatch ALL batches (async), then materialize."""
+        into batches, pack same-batch-class batches across sequences
+        (``max_pack`` per dispatch), dispatch ALL of it (async), then
+        materialize."""
         queue, self._queue = self._queue, []
         groups: dict[tuple[str, int], list[Request]] = collections.OrderedDict()
         for req in queue:
             groups.setdefault((req.sequence, self.bucket_of(req.n)),
                               []).append(req)
+
+        # cold keys (no compiled program yet) dispatch unpacked this
+        # cycle: packing them would stall the whole pack behind a fresh
+        # member compile; by the next drain they are warm and packable
+        cold = {key for key in groups if key not in self._programs}
 
         # resolve every program before dispatching anything: a compile
         # failure for one group (e.g. an unpaddable graph) must not drop
@@ -296,22 +423,43 @@ class ServingEngine:
             self._queue = queue + self._queue
             raise
 
-        in_flight = []
-        for (sequence, bucket), reqs in groups.items():
-            prog, pad_vals = progs[(sequence, bucket)]
+        units = []                       # (key, chunk, batch) triples
+        for key, reqs in groups.items():
             for i in range(0, len(reqs), self.max_batch):
                 chunk = reqs[i:i + self.max_batch]
-                batch = self._dispatch_batch(len(chunk))
-                args = self._assemble(chunk, sequence, bucket, batch, pad_vals)
-                outs = prog(**args)          # async dispatch — no block
-                if not isinstance(outs, tuple):
-                    outs = (outs,)
-                self.n_dispatches += 1
+                units.append((key, chunk, self._dispatch_batch(len(chunk))))
+        packs, singles = self._form_packs(units, cold)
+
+        in_flight = []
+        for pack_units in packs:
+            dispatch = self._get_pack(tuple(u[0] for u in pack_units))
+            member_inputs = [
+                self._assemble(chunk, key[0], key[1], batch, progs[key][1])
+                for key, chunk, batch in pack_units]
+            t_disp = time.perf_counter()
+            outs_list = dispatch(member_inputs)   # async dispatch — no block
+            self.n_dispatches += 1
+            self.n_packed_dispatches += 1
+            self.n_packed_members += len(pack_units)
+            for (key, chunk, batch), outs in zip(pack_units, outs_list):
                 self._note_dispatch(len(chunk), batch)
-                in_flight.append((sequence, bucket, chunk, batch, outs))
+                waits = self._record_waits(chunk, t_disp)
+                in_flight.append((key[0], key[1], chunk, batch,
+                                  tuple(outs), waits))
+        for key, chunk, batch in singles:
+            prog, pad_vals = progs[key]
+            args = self._assemble(chunk, key[0], key[1], batch, pad_vals)
+            t_disp = time.perf_counter()
+            outs = prog(**args)          # async dispatch — no block
+            if not isinstance(outs, tuple):
+                outs = (outs,)
+            self.n_dispatches += 1
+            self._note_dispatch(len(chunk), batch)
+            waits = self._record_waits(chunk, t_disp)
+            in_flight.append((key[0], key[1], chunk, batch, outs, waits))
 
         results: list[RequestResult] = []
-        for sequence, bucket, chunk, batch, outs in in_flight:
+        for sequence, bucket, chunk, batch, outs, waits in in_flight:
             host = [np.asarray(o) for o in outs]    # blocks until ready
             t_done = time.perf_counter()
             for i, req in enumerate(chunk):
@@ -322,7 +470,8 @@ class ServingEngine:
                 results.append(RequestResult(
                     rid=req.rid, sequence=req.sequence, n=req.n,
                     bucket=bucket, batch_size=len(chunk), outputs=sliced,
-                    latency_s=t_done - req.t_submit))
+                    latency_s=t_done - req.t_submit,
+                    queue_wait_s=waits[i]))
         return results
 
     def serve(self, requests: Sequence[tuple[str, int, Mapping[str, Any]]],
@@ -368,7 +517,14 @@ class ServingEngine:
             "n_dispatches": self.n_dispatches,
             "n_padded_rows": self.n_padded_rows,
             "batch_occupancy": occupancy,
+            "max_pack": self.max_pack,
+            "n_packed_dispatches": self.n_packed_dispatches,
+            "n_packed_members": self.n_packed_members,
             "programs": sorted(f"{s}/{b}" for s, b in self._programs),
+            "packs": sorted("+".join(f"{s}/{b}" for s, b in key)
+                            for key in self._packs),
+            "queue_wait": (cache.stats.queue_wait_percentiles()
+                           if cache is not None else None),
             "cache": cache.stats.as_dict() if cache is not None else None,
         }
 
@@ -416,6 +572,11 @@ class ShardedServingEngine(ServingEngine):
     n_replicas`` when bit-stability across engine configs matters
     (tests/test_dist.py pins both properties).
 
+    Packing is disabled (``max_pack`` is pinned to 1): packed programs
+    are plain batched functions, not ``shard_map``-lowered, so a packed
+    dispatch would silently bypass the mesh — DESIGN.md §9 records
+    sharded packing as an open edge.
+
     Args:
       mesh: mesh with the replica axis (default:
         ``launch.mesh.make_data_mesh()`` over all local devices).
@@ -446,7 +607,7 @@ class ShardedServingEngine(ServingEngine):
         super().__init__(compiler=compiler,
                          max_batch=self.n_replicas * self.rows_cap,
                          min_bucket=min_bucket, registry=registry,
-                         mode=mode)
+                         mode=mode, max_pack=1)
         self.replica_rows = [0] * self.n_replicas
 
     def _get_program(self, sequence: str, bucket: int

@@ -251,7 +251,9 @@ def test_warm_then_serve_never_compiles():
     engine = _engine()
     engine.warm("SSCAL", [96, 100, 200])
     st0 = engine.stats()["cache"]["buckets"]
-    assert sorted(st0) == ["SSCAL/128", "SSCAL/256"]
+    # warm also pre-builds the pack composition over the warmed keys (§9)
+    assert sorted(st0) == ["SSCAL/128", "SSCAL/256",
+                           "pack/SSCAL/128+SSCAL/256"]
     workload = [("SSCAL", n, make_inputs(REGISTRY["SSCAL"], n, seed=n))
                 for n in (96, 100, 128, 200)]
     results = engine.serve(workload)
