@@ -170,14 +170,36 @@ class FusionCompiler:
         return repr((backend, mode_key, self.hw, self.interpret,
                      self.max_impls))
 
-    @staticmethod
-    def _cell_fingerprint(val) -> tuple | None:
-        """Stable content fingerprint of one closure cell, or None when
-        the value has no address-free identity (default object reprs
-        embed a reusable memory address; large ndarray reprs elide)."""
+    @classmethod
+    def _cell_fingerprint(cls, val, _seen: set | None = None) -> tuple | None:
+        """Stable *content* fingerprint of one closure-cell value, or
+        None when the value has no address-free identity (default
+        object reprs embed a reusable memory address; large ndarray
+        reprs elide).
+
+        Recurses structurally: containers fingerprint element-wise,
+        dataclass instances field-wise, and functions by bytecode +
+        consts + names + their OWN closure cells — so two structurally
+        equal closures built at different addresses alias to one
+        program-cache entry, while a nested closure whose captured
+        value differs can never alias (the earlier bytecode-only
+        function fingerprint let it)."""
+        if _seen is None:
+            _seen = set()
+        if id(val) in _seen:
+            return ("cycle",)
         code = getattr(val, "__code__", None)
         if code is not None:
-            return ("fn", code.co_code, repr(code.co_names))
+            _seen.add(id(val))
+            consts = tuple(c.co_code if hasattr(c, "co_code") else repr(c)
+                           for c in code.co_consts)
+            cells = getattr(val, "__closure__", None) or ()
+            prints = [cls._cell_fingerprint(c.cell_contents, _seen)
+                      for c in cells]
+            if any(p is None for p in prints):
+                return None
+            return ("fn", code.co_code, repr(consts), repr(code.co_names),
+                    repr(prints))
         if isinstance(val, np.ndarray):
             return ("arr", val.shape, str(val.dtype),
                     hashlib.sha256(np.ascontiguousarray(val).tobytes())
@@ -185,6 +207,39 @@ class FusionCompiler:
         if isinstance(val, (int, float, complex, str, bytes, bool,
                             type(None))):
             return ("lit", repr(val))
+        if isinstance(val, (tuple, list)):
+            _seen.add(id(val))
+            items = [cls._cell_fingerprint(v, _seen) for v in val]
+            if any(p is None for p in items):
+                return None
+            return (type(val).__name__, repr(items))
+        if isinstance(val, dict):
+            _seen.add(id(val))
+            pairs = []
+            for k, v in val.items():
+                kp = cls._cell_fingerprint(k, _seen)
+                vp = cls._cell_fingerprint(v, _seen)
+                if kp is None or vp is None:
+                    return None
+                pairs.append((kp, vp))
+            pairs.sort(key=repr)
+            return ("dict", repr(pairs))
+        if isinstance(val, (set, frozenset)):
+            items = [cls._cell_fingerprint(v, _seen) for v in val]
+            if any(p is None for p in items):
+                return None
+            items.sort(key=repr)
+            return ("set", repr(items))
+        if dataclasses.is_dataclass(val) and not isinstance(val, type):
+            _seen.add(id(val))
+            fields = []
+            for f in dataclasses.fields(val):
+                fp = cls._cell_fingerprint(getattr(val, f.name), _seen)
+                if fp is None:
+                    return None
+                fields.append((f.name, fp))
+            return ("dc", type(val).__module__, type(val).__qualname__,
+                    repr(fields))
         r = repr(val)
         return None if " at 0x" in r else ("repr", r)
 

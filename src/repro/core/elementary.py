@@ -37,7 +37,9 @@ import enum
 import math
 from typing import Any, Callable, Sequence
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class Kind(enum.Enum):
@@ -54,7 +56,24 @@ class Monoid(enum.Enum):
 
     @property
     def identity(self) -> float:
+        """Float identity (legacy; dtype-blind — ``-inf`` is wrong for
+        integer MAX/MIN).  Prefer :meth:`identity_for`."""
         return {"sum": 0.0, "max": -jnp.inf, "min": jnp.inf}[self.value]
+
+    def identity_for(self, dtype):
+        """The monoid identity as a scalar of ``dtype``.
+
+        Floats keep 0 / -inf / +inf; integer MAX/MIN use the dtype's
+        ``iinfo`` bounds (there is no integer infinity — padding an
+        int32 MAX reduce with float -inf would be a cast error, and
+        with 0 would be wrong for all-negative data)."""
+        dtype = np.dtype(dtype)
+        if self is Monoid.SUM:
+            return dtype.type(0)
+        if dtype.kind in "iu":
+            info = np.iinfo(dtype)
+            return dtype.type(info.min if self is Monoid.MAX else info.max)
+        return dtype.type(-np.inf if self is Monoid.MAX else np.inf)
 
     def combine(self, a, b):
         if self is Monoid.SUM:
@@ -100,6 +119,12 @@ class Elementary:
     # element granularity per axis: the paper uses 32-subvectors / 32x32
     # tiles; block sizes must be multiples of this.
     elem: tuple[int, ...] = ()
+    # True when all-zero lanes of the array arguments yield zero output
+    # lanes (the function is zero-preserving, e.g. multilinear maps).
+    # Zero-padding a serving batch is only reduction-safe through chains
+    # of pad_safe calls; ``exp``/``rsqrt`` (zero maps to 1 / inf) must
+    # set False so the engine falls back to per-lane masking.
+    pad_safe: bool = True
 
     def __post_init__(self):
         depth = len(self.formal_axes)
@@ -139,7 +164,7 @@ def _as_f32(x):
 # ---------------------------------------------------------------------------
 
 def make_map(name: str, fn: Callable, arity: int, *, scalar_args: Sequence[int] = (),
-             flops_per_point: float = 1.0) -> Elementary:
+             flops_per_point: float = 1.0, pad_safe: bool = True) -> Elementary:
     """Depth-1 map over lists; ``scalar_args`` are broadcast () arguments."""
     specs = tuple(
         ArgSpec(() if i in set(scalar_args) else (0,)) for i in range(arity)
@@ -147,6 +172,7 @@ def make_map(name: str, fn: Callable, arity: int, *, scalar_args: Sequence[int] 
     return Elementary(
         name=name, kind=Kind.MAP, formal_axes=("i",), in_specs=specs,
         out_axes=(0,), fn=fn, flops_per_point=flops_per_point,
+        pad_safe=pad_safe,
     )
 
 
@@ -167,18 +193,19 @@ def make_reduce(name: str, monoid: Monoid = Monoid.SUM, *,
 
 
 def make_nested_map(name: str, fn: Callable, in_axes: Sequence[Sequence[int]], *,
-                    flops_per_point: float = 1.0, elem: tuple[int, int] = (8, 128)
-                    ) -> Elementary:
+                    flops_per_point: float = 1.0, elem: tuple[int, int] = (8, 128),
+                    pad_safe: bool = True) -> Elementary:
     """Depth-2 map producing a matrix indexed (i, j)."""
     return Elementary(
         name=name, kind=Kind.NESTED_MAP, formal_axes=("i", "j"),
         in_specs=tuple(ArgSpec(tuple(a)) for a in in_axes), out_axes=(0, 1),
-        fn=fn, flops_per_point=flops_per_point, elem=elem,
+        fn=fn, flops_per_point=flops_per_point, elem=elem, pad_safe=pad_safe,
     )
 
 
 def make_tensor_map(name: str, fn: Callable, in_axes: Sequence[Sequence[int]],
-                    depth: int, *, flops_per_point: float = 1.0) -> Elementary:
+                    depth: int, *, flops_per_point: float = 1.0,
+                    pad_safe: bool = True) -> Elementary:
     """Depth-``depth`` map producing a rank-``depth`` tensor.
 
     Extension past the paper's depth-2 taxonomy (batched matrix maps
@@ -188,7 +215,7 @@ def make_tensor_map(name: str, fn: Callable, in_axes: Sequence[Sequence[int]],
         formal_axes=tuple(f"a{k}" for k in range(depth)),
         in_specs=tuple(ArgSpec(tuple(a)) for a in in_axes),
         out_axes=tuple(range(depth)), fn=fn,
-        flops_per_point=flops_per_point,
+        flops_per_point=flops_per_point, pad_safe=pad_safe,
     )
 
 
@@ -210,3 +237,22 @@ def make_nested_map_reduce(name: str, fn: Callable,
         in_specs=tuple(ArgSpec(tuple(a)) for a in in_axes), out_axes=(out_axis,),
         fn=fn, monoid=monoid, flops_per_point=flops_per_point, elem=elem,
     )
+
+
+# ---------------------------------------------------------------------------
+# Non-multilinear map primitives (the ops an LM decode step needs).
+#
+# ``pad_safe=False``: a zero lane maps to 1.0 (exp) or inf (rsqrt), so
+# zero-padding is NOT reduction-safe through these — graphs routing them
+# into a reduction must be served through per-lane masking
+# (``core.masking``) instead of whole-graph identity padding.
+# ---------------------------------------------------------------------------
+
+exp_map = make_map("exp", jnp.exp, arity=1, flops_per_point=1,
+                   pad_safe=False)
+rsqrt_map = make_map("rsqrt", lambda x: jax.lax.rsqrt(x), arity=1,
+                     flops_per_point=1, pad_safe=False)
+# exp(x - m) with a broadcast (reduce-finished) max — the softmax core;
+# a zero lane maps to exp(-m), not zero
+exp_sub = make_map("exp_sub", lambda x, m: jnp.exp(x - m), arity=2,
+                   scalar_args=(1,), flops_per_point=2, pad_safe=False)

@@ -15,9 +15,14 @@ The engine takes ``(sequence, n, inputs)`` requests off a queue and:
    program per ``(sequence, bucket, batch-size-class)``;
 2. **pads** — fills each input up to the bucket shape with a
    *reduction-safe* value: the identity of the graph's reduction monoid
-   (0 for SUM, -inf/+inf for MAX/MIN — ``Monoid.identity``), so padded
-   lanes are invisible to the reductions and the unpadded slice of every
-   output is exactly what an unpadded run would produce;
+   in the input's dtype (0 for SUM, ±inf / iinfo bounds for MAX/MIN —
+   ``Monoid.identity_for``), so padded lanes are invisible to the
+   reductions and the unpadded slice of every output is exactly what an
+   unpadded run would produce; graphs with no safe identity (mixed
+   monoids, non-zero-preserving maps into reductions — LM decode
+   attention is both) fall back to *per-lane masking*: the script is
+   re-traced through ``core.masking`` with an extra ``_mask`` input and
+   every reduction ignores padded lanes explicitly (DESIGN.md §10);
 3. **groups** — same-``(sequence, bucket)`` requests form batches of up
    to ``max_batch`` (batch sizes rounded to powers of two to bound jit
    re-traces), executed by a ``BatchedProgram``;
@@ -51,7 +56,9 @@ import numpy as np
 from ..core import FusionCompiler
 from ..core.codegen import BatchedProgram, PackedDispatch
 from ..core.elementary import Monoid
-from ..core.graph import Graph
+from ..core.graph import Graph, trace
+from ..core.masking import (MASK_INPUT, mask_row, masked_wrapper,
+                            padded_dims)
 
 
 # ---------------------------------------------------------------------------
@@ -89,43 +96,63 @@ def _pow2_batch(k: int, max_batch: int) -> int:
 # reduction-safe padding
 # ---------------------------------------------------------------------------
 
-def input_pad_values(g: Graph) -> dict[str, float]:
+def input_pad_values(g: Graph) -> dict[str, Any]:
     """Safe pad value per graph input.
 
     Padded lanes must be invisible to every reduction that (transitively)
     consumes them, so inputs are padded with the reduction monoid's
-    identity — see DESIGN.md §6.
+    identity, in each input's own dtype (``Monoid.identity_for`` —
+    integer MAX/MIN graphs pad with iinfo bounds, not float ±inf) —
+    see DESIGN.md §6.
 
-    * SUM graphs pad with 0, which is sound through any chain of the
-      library's maps: they are all multilinear in their array arguments
-      (``a*x+y``, ``w-a*v``, ``A@x`` partials, rank-2 updates, ...), so
-      all-zero lanes stay zero on the way into the reduction.
-    * MAX/MIN graphs pad with -inf/+inf, which is NOT preserved by
+    * SUM graphs pad with 0, which is sound through chains of
+      ``pad_safe`` (zero-preserving) maps: the BLAS library is all
+      multilinear in its array arguments (``a*x+y``, ``w-a*v``, ``A@x``
+      partials, rank-2 updates, ...), so all-zero lanes stay zero on
+      the way into the reduction.  A non-``pad_safe`` call (``exp``
+      maps 0 to 1) feeding a reduction voids that invariant.
+    * MAX/MIN graphs pad with their identity, which is NOT preserved by
       arbitrary maps (``a*x`` with ``a<0`` flips -inf to +inf;
       ``w - a*v`` on two -inf lanes is NaN), so the identity is only
-      accepted when every reduction reads graph inputs *directly*;
-      map-into-MAX chains need masking, which we don't grow until a
-      workload does.
+      accepted when every reduction reads graph inputs *directly*.
     * A graph mixing different monoids has no single safe pad value.
+
+    Every rejection raises ``ValueError`` mentioning "mask": the
+    serving engine catches it and re-traces the script through the
+    per-lane masking rewrite (``core.masking``, DESIGN.md §10).
     """
     monoids = {c.elem.monoid for c in g.calls if c.elem.is_reduction}
-    if not monoids or monoids == {Monoid.SUM}:
-        return {v.name: 0.0 for v in g.inputs}
     if len(monoids) > 1:
         raise ValueError(
             f"graph mixes reduction monoids "
             f"{sorted(m.value for m in monoids)}: no single padding "
             "identity is reduction-safe — mask instead")
-    unsafe = [c for c in g.calls if c.elem.is_reduction
-              and any(not a.is_input for a in c.args)]
-    if unsafe:
-        names = ", ".join(c.elem.name for c in unsafe)
-        raise ValueError(
-            f"non-SUM reduction(s) ({names}) consume computed values: "
-            "-inf/+inf padding is not preserved through maps — mask "
-            "instead")
-    ident = float(next(iter(monoids)).identity)
-    return {v.name: ident for v in g.inputs}
+    if monoids and monoids != {Monoid.SUM}:
+        unsafe = [c for c in g.calls if c.elem.is_reduction
+                  and any(not a.is_input for a in c.args)]
+        if unsafe:
+            names = ", ".join(c.elem.name for c in unsafe)
+            raise ValueError(
+                f"non-SUM reduction(s) ({names}) consume computed "
+                "values: identity padding is not preserved through "
+                "maps — mask instead")
+    else:
+        # SUM-only: identity padding is sound iff every call on a path
+        # into a reduction is zero-preserving (pad_safe)
+        feeding: set = set()
+        for c in reversed(g.calls):
+            if c.elem.is_reduction or c.out in feeding:
+                feeding.update(c.args)
+        unsafe = [c for c in g.calls
+                  if not c.elem.pad_safe and c.out in feeding]
+        if unsafe:
+            names = ", ".join(sorted({c.elem.name for c in unsafe}))
+            raise ValueError(
+                f"non-pad_safe call(s) ({names}) feed a reduction: "
+                "zero padding is not preserved through them — mask "
+                "instead")
+    m = next(iter(monoids)) if monoids else Monoid.SUM
+    return {v.name: m.identity_for(v.dtype) for v in g.inputs}
 
 
 def pad_to_shape(x: np.ndarray, shape: Sequence[int], fill: float) -> np.ndarray:
@@ -213,7 +240,10 @@ class ServingEngine:
         self.max_pack = max_pack
         self.registry = registry
         self._programs: dict[tuple[str, int], BatchedProgram] = {}
-        self._pad_values: dict[tuple[str, int], dict[str, float]] = {}
+        # (script, shapes, pad values, masked?) per key — the masked
+        # fallback decision, made once per (sequence, bucket)
+        self._specs: dict[tuple[str, int], tuple] = {}
+        self._pad_values: dict[tuple[str, int], dict[str, Any]] = {}
         self._packs: dict[tuple[tuple[str, int], ...], PackedDispatch] = {}
         self._queue: list[Request] = []
         self._rid = 0
@@ -228,17 +258,52 @@ class ServingEngine:
     def bucket_of(self, n: int) -> int:
         return bucket_of(n, self.min_bucket)
 
+    def _compile_specs(self, sequence: str, bucket: int) -> tuple:
+        """``(script, shapes, pad_values, masked)`` for one key.
+
+        Decides — once per ``(sequence, bucket)`` — how padded lanes
+        stay invisible to the graph's reductions:
+
+        1. a registry entry carrying explicit ``pad_values`` is taken
+           at its word;
+        2. otherwise ``input_pad_values`` analyzes a trace for a
+           whole-graph identity (DESIGN.md §6);
+        3. when the analysis refuses (mixed monoids, map-into-MAX,
+           non-``pad_safe`` maps into SUM), the script is re-wrapped
+           through the per-lane masking rewrite (``core.masking``,
+           DESIGN.md §10): the shape dict gains the rank-1 ``_mask``
+           input and every input simply zero-fills.
+        """
+        key = (sequence, bucket)
+        spec = self._specs.get(key)
+        if spec is None:
+            seq = self.registry[sequence]
+            shapes = seq.shapes(bucket)
+            explicit = getattr(seq, "pad_values", None)
+            if explicit is not None:
+                spec = (seq.script, shapes, dict(explicit), False)
+            else:
+                try:
+                    pads = input_pad_values(
+                        trace(seq.script, shapes, dtype=self.compiler.dtype))
+                    spec = (seq.script, shapes, pads, False)
+                except ValueError:
+                    dims = padded_dims(shapes, seq.shapes(bucket * 2))
+                    script, shapes = masked_wrapper(seq.script, shapes, dims)
+                    spec = (script, shapes, {n: 0.0 for n in shapes}, True)
+            self._specs[key] = spec
+        return spec
+
     def _get_program(self, sequence: str, bucket: int
-                     ) -> tuple[BatchedProgram, dict[str, float]]:
+                     ) -> tuple[BatchedProgram, dict[str, Any]]:
         key = (sequence, bucket)
         prog = self._programs.get(key)
         if prog is None:
-            seq = self.registry[sequence]
+            script, shapes, pads, _ = self._compile_specs(sequence, bucket)
             prog = self.compiler.compile_batched(
-                seq.script, seq.shapes(bucket), max_batch=self.max_batch,
+                script, shapes, max_batch=self.max_batch,
                 mode=self.mode, bucket=f"{sequence}/{bucket}")
-            # pad analysis can reject the graph — cache only complete pairs
-            self._pad_values[key] = input_pad_values(prog.graph)
+            self._pad_values[key] = pads
             self._programs[key] = prog
         return prog, self._pad_values[key]
 
@@ -249,8 +314,7 @@ class ServingEngine:
         dispatch = self._packs.get(members)
         if dispatch is None:
             dispatch = self.compiler.compile_packed(
-                [(self.registry[s].script, self.registry[s].shapes(b))
-                 for s, b in members],
+                [self._compile_specs(s, b)[:2] for s, b in members],
                 max_batch=self.max_batch, mode=self.mode,
                 bucket="pack/" + "+".join(f"{s}/{b}" for s, b in members))
             self._packs[members] = dispatch
@@ -307,6 +371,15 @@ class ServingEngine:
         """Telemetry hook: one dispatch of ``batch`` rows, ``n_real``
         of them real requests (subclasses track replica routing)."""
 
+    @staticmethod
+    def _dummy_inputs(graph, bs: int) -> dict[str, np.ndarray]:
+        """Zero-filled warm-up batch; the ``_mask`` input (if the
+        program is masked) gets all-ones so warm-up lanes are all valid
+        — an all-masked row would divide by an empty softmax sum."""
+        return {v.name: (np.ones if v.name == MASK_INPUT else np.zeros)(
+                    (bs,) + v.shape, v.dtype)
+                for v in graph.inputs}
+
     def warm(self, sequence: str, ns: Sequence[int],
              trace_batches: bool = True,
              trace_packs: bool = True) -> list[int]:
@@ -323,8 +396,7 @@ class ServingEngine:
             if not trace_batches:
                 continue
             for bs in self._trace_sizes():
-                dummy = {v.name: np.zeros((bs,) + v.shape, v.dtype)
-                         for v in prog.graph.inputs}
+                dummy = self._dummy_inputs(prog.graph, bs)
                 prog.block_until_ready(prog(**dummy))
         if trace_packs:
             self.warm_packs(trace_batches=trace_batches)
@@ -352,8 +424,7 @@ class ServingEngine:
                 continue
             for bs in self._trace_sizes():
                 member_inputs = [
-                    {v.name: np.zeros((bs,) + v.shape, v.dtype)
-                     for v in self._programs[key].graph.inputs}
+                    self._dummy_inputs(self._programs[key].graph, bs)
                     for key in members]
                 dispatch.block_until_ready(dispatch(member_inputs))
         return warmed
@@ -375,13 +446,18 @@ class ServingEngine:
 
     # -- execution ----------------------------------------------------------
     def _assemble(self, chunk: list[Request], sequence: str, bucket: int,
-                  batch: int, pad_vals: dict[str, float]) -> dict[str, np.ndarray]:
-        shapes = self.registry[sequence].shapes(bucket)
+                  batch: int, pad_vals: dict[str, Any]) -> dict[str, np.ndarray]:
+        _, shapes, _, masked = self._compile_specs(sequence, bucket)
         self.n_padded_rows += batch - len(chunk)
         out = {}
         for name, shape in shapes.items():
-            rows = [pad_to_shape(np.asarray(r.inputs[name]), shape,
-                                 pad_vals[name]) for r in chunk]
+            if masked and name == MASK_INPUT:
+                # synthesized, not taken from the request: 1.0 on the
+                # first n lanes, 0.0 on padding
+                rows = [mask_row(shape[0], r.n) for r in chunk]
+            else:
+                rows = [pad_to_shape(np.asarray(r.inputs[name]), shape,
+                                     pad_vals[name]) for r in chunk]
             # fill the pow2-rounded batch by repeating row 0: real data,
             # so no NaN/inf can leak out of speculative lanes
             rows += [rows[0]] * (batch - len(rows))
@@ -611,18 +687,18 @@ class ShardedServingEngine(ServingEngine):
         self.replica_rows = [0] * self.n_replicas
 
     def _get_program(self, sequence: str, bucket: int
-                     ) -> tuple[BatchedProgram, dict[str, float]]:
+                     ) -> tuple[BatchedProgram, dict[str, Any]]:
         if self.n_replicas == 1:             # single-device fallback
             return super()._get_program(sequence, bucket)
         key = (sequence, bucket)
         prog = self._programs.get(key)
         if prog is None:
-            seq = self.registry[sequence]
+            script, shapes, pads, _ = self._compile_specs(sequence, bucket)
             prog = self.compiler.compile_sharded(
-                seq.script, seq.shapes(bucket), mesh=self.mesh,
+                script, shapes, mesh=self.mesh,
                 axis=self.axis, max_batch=self.max_batch,
                 mode=self.mode, bucket=f"{sequence}/{bucket}")
-            self._pad_values[key] = input_pad_values(prog.graph)
+            self._pad_values[key] = pads
             self._programs[key] = prog
         return prog, self._pad_values[key]
 

@@ -1,0 +1,211 @@
+"""Per-lane masked padding (core.masking, DESIGN.md §10) + the
+dtype-aware monoid identities and ``pad_safe`` taxonomy it rests on:
+identity_for units, the hardened ``input_pad_values`` refusals that
+trigger the masked fallback, mask-elementary algebra, the padded-dim
+structural diff, wrapper error paths, and a compiled masked softmax
+checked lane-for-lane against numpy on the unpadded slice."""
+import numpy as np
+import pytest
+
+from repro.blas import elementary_lib as lib
+from repro.core import FusionCompiler, Monoid
+from repro.core.elementary import exp_map, exp_sub, rsqrt_map
+from repro.core.graph import trace
+from repro.core.masking import (MASK_INPUT, MaskedTrace, mask_elementary,
+                                mask_row, masked_wrapper, padded_dims)
+from repro.programs import model_lib as mlib
+from repro.serving import input_pad_values
+
+
+# ---------------------------------------------------------------------------
+# dtype-aware identities
+# ---------------------------------------------------------------------------
+
+def test_identity_for_floats():
+    for dt in (np.float32, np.float64):
+        assert Monoid.SUM.identity_for(dt) == 0.0
+        assert Monoid.MAX.identity_for(dt) == -np.inf
+        assert Monoid.MIN.identity_for(dt) == np.inf
+
+
+def test_identity_for_integers_uses_iinfo_bounds():
+    for dt in (np.int32, np.int64, np.int8):
+        info = np.iinfo(dt)
+        assert Monoid.SUM.identity_for(dt) == 0
+        assert Monoid.MAX.identity_for(dt) == info.min
+        assert Monoid.MIN.identity_for(dt) == info.max
+
+
+def test_identity_for_is_absorbed():
+    """combine(identity_for(dt), x) == x in that dtype — the property
+    the padding scheme actually needs."""
+    for m in Monoid:
+        for dt in (np.float32, np.int32):
+            ident = m.identity_for(dt)
+            x = np.asarray(7, dt)
+            assert m.combine(np.asarray(ident, dt), x) == x
+
+
+def test_int_max_graph_pads_with_iinfo_min():
+    def script(g, x):
+        return (g.apply(lib.max_reduce, x, name="m"),)
+
+    g = trace(script, {"x": (64,)}, dtype=np.int32)
+    assert input_pad_values(g) == {"x": np.iinfo(np.int32).min}
+
+
+# ---------------------------------------------------------------------------
+# pad_safe taxonomy -> input_pad_values refusals
+# ---------------------------------------------------------------------------
+
+def test_pad_safe_flags():
+    # multilinear maps preserve all-zero lanes
+    assert lib.scal.pad_safe and lib.axpy.pad_safe and lib.ew_mul.pad_safe
+    # exp(0) = 1, rsqrt(0) = inf: NOT zero-preserving
+    assert not exp_map.pad_safe
+    assert not rsqrt_map.pad_safe
+    assert not exp_sub.pad_safe
+    # rms_scale's rsqrt acts on a *scalar* arg; zero x lanes stay zero
+    assert mlib.rms_scale.pad_safe
+
+
+def test_non_pad_safe_feeding_sum_reduce_refuses():
+    """exp feeding a SUM reduction maps padded zeros to ones — zero
+    padding is unsound, the analysis must hand off to masking."""
+
+    def script(g, x):
+        e = g.apply(exp_map, x, name="e")
+        return (g.apply(lib.sum_reduce, e, name="z"),)
+
+    g = trace(script, {"x": (64,)})
+    with pytest.raises(ValueError, match="mask"):
+        input_pad_values(g)
+
+
+def test_non_pad_safe_away_from_reductions_is_fine():
+    """exp on a branch no reduction consumes does not block zero
+    padding of the reduction branch."""
+
+    def script(g, x, y):
+        e = g.apply(exp_map, y, name="e")
+        s = g.apply(lib.sum_reduce, x, name="s")
+        return (g.apply(lib.axpy, s, e, e, name="o"),)
+
+    g = trace(script, {"x": (64,), "y": (64,)})
+    assert input_pad_values(g) == {"x": 0.0, "y": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# mask primitives
+# ---------------------------------------------------------------------------
+
+def test_mask_row():
+    m = mask_row(8, 5)
+    np.testing.assert_array_equal(m, [1, 1, 1, 1, 1, 0, 0, 0])
+    assert m.dtype == np.float32
+
+
+def test_mask_elementary_substitutes_identity():
+    me = mask_elementary(Monoid.SUM, 1, 0)
+    x = np.asarray([3.0, 4.0], np.float32)
+    m = np.asarray([1.0, 0.0], np.float32)
+    np.testing.assert_array_equal(np.asarray(me.fn(x, m)), [3.0, 0.0])
+    mx = mask_elementary(Monoid.MAX, 1, 0)
+    np.testing.assert_array_equal(np.asarray(mx.fn(x, m)), [3.0, -np.inf])
+    assert me.pad_safe and not mx.pad_safe   # -inf is not zero
+
+
+def test_mask_elementary_rank2_dims():
+    x = np.ones((2, 2), np.float32)
+    m = np.asarray([1.0, 0.0], np.float32)
+    r0 = mask_elementary(Monoid.SUM, 2, 0)
+    np.testing.assert_array_equal(np.asarray(r0.fn(x, m)),
+                                  [[1.0, 1.0], [0.0, 0.0]])
+    r1 = mask_elementary(Monoid.SUM, 2, 1)
+    np.testing.assert_array_equal(np.asarray(r1.fn(x, m)),
+                                  [[1.0, 0.0], [1.0, 0.0]])
+
+
+def test_mask_elementary_memoized_per_monoid_rank_dim():
+    assert mask_elementary(Monoid.SUM, 1, 0) is mask_elementary(
+        Monoid.SUM, 1, 0)
+    assert mask_elementary(Monoid.SUM, 1, 0) is not mask_elementary(
+        Monoid.MAX, 1, 0)
+
+
+def test_padded_dims_structural_diff():
+    shapes = lambda n: {"q": (48,), "K": (n, 48), "V": (n, 48), "s": ()}
+    assert padded_dims(shapes(128), shapes(256)) == {
+        "q": (), "K": (0,), "V": (0,), "s": ()}
+
+
+# ---------------------------------------------------------------------------
+# masked_wrapper error paths
+# ---------------------------------------------------------------------------
+
+def test_masked_wrapper_rejects_no_padded_dims():
+    with pytest.raises(ValueError, match="nothing to mask"):
+        masked_wrapper(lambda g, x: (x,), {"x": (8,)}, {"x": ()})
+
+
+def test_masked_wrapper_rejects_independent_extents():
+    with pytest.raises(ValueError, match="_mask row"):
+        masked_wrapper(lambda g, x, y: (x, y),
+                       {"x": (8,), "y": (4,)}, {"x": (0,), "y": (0,)})
+
+
+def test_masked_wrapper_rejects_reserved_name():
+    with pytest.raises(ValueError, match="reserved"):
+        masked_wrapper(lambda g, **kw: (kw["x"],),
+                       {"x": (8,), MASK_INPUT: (8,)},
+                       {"x": (0,), MASK_INPUT: ()})
+
+
+# ---------------------------------------------------------------------------
+# end to end: compiled masked softmax == numpy softmax on the live lanes
+# ---------------------------------------------------------------------------
+
+def test_masked_softmax_matches_unpadded_numpy():
+    def softmax_script(g, x):
+        mx = g.apply(lib.max_reduce, x, name="mx")
+        e = g.apply(exp_sub, x, mx, name="e")
+        z = g.apply(lib.sum_reduce, e, name="z")
+        return (g.apply(mlib.div_by, z, e, name="w"),)
+
+    bucket, n = 64, 37
+    shapes = {"x": (bucket,)}
+    wrapped, wshapes = masked_wrapper(
+        softmax_script, shapes, padded_dims(shapes, {"x": (2 * bucket,)}))
+    assert wshapes == {"x": (bucket,), MASK_INPUT: (bucket,)}
+
+    cc = FusionCompiler(cache=None)
+    prog = cc.compile(wrapped, wshapes)
+    x = np.random.default_rng(3).standard_normal(bucket).astype(np.float32)
+    w = np.asarray(prog(x=x, _mask=mask_row(bucket, n)))
+
+    # live lanes match the unpadded softmax; padded lanes hold junk by
+    # design (masking protects REDUCTIONS, the serving engine slices
+    # outputs back to the request size)
+    e = np.exp(x[:n] - np.max(x[:n]))
+    np.testing.assert_allclose(w[:n].astype(np.float64), e / e.sum(),
+                               rtol=1e-6, atol=1e-7)
+    assert np.isfinite(w).all()
+
+
+def test_masked_trace_memoizes_masked_vars():
+    """Masking the same var for the same reduce-dims twice inserts ONE
+    mask call (graph stays small, program cache keys stay stable)."""
+    bucket = 64
+    shapes = {"x": (bucket,)}
+
+    def script(g, x):
+        a = g.apply(lib.sum_reduce, x, name="a")
+        b = g.apply(lib.sum_reduce, x, name="b")
+        return (g.apply(lib.axpy, a, x, x, name="o"),
+                g.apply(lib.scal, b, x, name="p"))
+
+    wrapped, wshapes = masked_wrapper(
+        script, shapes, padded_dims(shapes, {"x": (2 * bucket,)}))
+    g = trace(wrapped, wshapes)
+    n_masks = sum(1 for c in g.calls if c.elem.name.startswith("mask_"))
+    assert n_masks == 1

@@ -1,0 +1,278 @@
+"""LM decode-step workloads through the fusion pipeline (DESIGN.md §10).
+
+Acceptance tests for the model program group: every registered model
+sequence served through the real ``ServingEngine`` (batched, mixed
+request sizes) **bitwise-equal** to the repo's jitted references at the
+pinned sizes — including ``LM_DECODE_ATTN``, the mixed-monoid
+(SUM + MAX) graph that only serves through per-lane masking — plus all
+compiler modes (best / unfused / autotune), packed dispatch with a
+masked member, and the §9 ragged/subset drain memoization pins.
+
+Size contracts (DESIGN.md §10): matvec-bearing graphs are bitwise at
+multiple-of-8 sizes and allclose elsewhere; map/reduce-only graphs are
+bitwise at every size; buckets stay <= 128 (the padded-SUM bitwise
+invariance envelope on the CPU backend).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FusionCompiler, PlanCache
+from repro.kernels import ref
+from repro.programs import ADAMW_HYPERS, MODELS, REGISTRY, make_inputs
+from repro.serving import ServingEngine
+
+MULT8_SIZES = (96, 128, 64, 120)
+ANY_SIZES = (96, 100, 128, 64)
+
+
+def _engine(max_batch=4, max_pack=8, **kw):
+    # min_bucket 128: the bitwise contracts are pinned at bucket 128
+    # (matvec graphs served at smaller unpadded buckets drift by ulps)
+    return ServingEngine(compiler=FusionCompiler(cache=PlanCache()),
+                         max_batch=max_batch, min_bucket=128,
+                         max_pack=max_pack, registry=REGISTRY, **kw)
+
+
+def _serve(engine, name, sizes):
+    reqs = [(name, n, make_inputs(REGISTRY[name], n, seed=i))
+            for i, n in enumerate(sizes)]
+    return {r.rid: r for r in engine.serve(reqs)}
+
+
+# jitted oracles — XLA's fused constant-folding path, which the
+# compiled programs reproduce bit for bit (plain numpy refs are only
+# allclose; see test_programs.py for those)
+
+@jax.jit
+def _rmsnorm_oracle(x, gamma):
+    return ref.rmsnorm(x[None], gamma)[0]
+
+
+@jax.jit
+def _block_oracle(x, gamma, W):
+    y = ref.rmsnorm(x[None], gamma)[0]
+    return x + jnp.dot(W, y, precision="highest")
+
+
+def _attn_oracle(q, K, V, scale):
+    out = ref.decode_attention(q[None, None, :], K[None, :, None, :],
+                               V[None, :, None, :], scale=scale)
+    return out[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# engine serving, mixed sizes, bitwise vs the jitted references
+# ---------------------------------------------------------------------------
+
+def test_rmsnorm_served_bitwise_any_size():
+    res = _serve(_engine(), "LM_RMSNORM", ANY_SIZES)
+    for i, n in enumerate(ANY_SIZES):
+        inp = make_inputs(REGISTRY["LM_RMSNORM"], n, seed=i)
+        want = np.asarray(_rmsnorm_oracle(inp["x"], inp["gamma"]))
+        np.testing.assert_array_equal(res[i].outputs[0], want)
+
+
+def test_block_served_bitwise_mult8():
+    res = _serve(_engine(), "LM_BLOCK", MULT8_SIZES)
+    for i, n in enumerate(MULT8_SIZES):
+        inp = make_inputs(REGISTRY["LM_BLOCK"], n, seed=i)
+        want = np.asarray(_block_oracle(inp["x"], inp["gamma"], inp["W"]))
+        np.testing.assert_array_equal(res[i].outputs[0], want)
+
+
+def test_decode_attn_served_bitwise_mult8_masked():
+    """The mixed-monoid showcase: SUM and MAX reductions in one graph,
+    exp between them — unservable by whole-graph identity padding, so
+    the engine must route it through the per-lane masking rewrite."""
+    engine = _engine()
+    res = _serve(engine, "LM_DECODE_ATTN", MULT8_SIZES)
+    assert engine._compile_specs("LM_DECODE_ATTN", 128)[3] is True
+    oracle = jax.jit(_attn_oracle)
+    for i, n in enumerate(MULT8_SIZES):
+        inp = make_inputs(REGISTRY["LM_DECODE_ATTN"], n, seed=i)
+        want = np.asarray(oracle(inp["q"], inp["K"], inp["V"], inp["scale"]))
+        np.testing.assert_array_equal(res[i].outputs[0], want)
+
+
+def test_decode_attn_allclose_off_mult8():
+    engine = _engine()
+    res = _serve(engine, "LM_DECODE_ATTN", (100,))
+    inp = make_inputs(REGISTRY["LM_DECODE_ATTN"], 100, seed=0)
+    want = np.asarray(jax.jit(_attn_oracle)(
+        inp["q"], inp["K"], inp["V"], inp["scale"]))
+    np.testing.assert_allclose(res[0].outputs[0], want,
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_fused_adamw_served_bitwise_any_size():
+    """Triple-output optimizer step via the explicit pad_values path
+    (no trace analysis, no masking)."""
+    engine = _engine()
+    res = _serve(engine, "FUSED_ADAMW", ANY_SIZES)
+    assert engine._compile_specs("FUSED_ADAMW", 128)[3] is False
+    h = ADAMW_HYPERS
+    oracle = jax.jit(lambda p, g, m, v: ref.adamw(
+        p, g, m, v, lr=h["lr"], beta1=h["beta1"], beta2=h["beta2"],
+        eps=h["eps"], weight_decay=h["weight_decay"], step=h["step"]))
+    for i, n in enumerate(ANY_SIZES):
+        inp = make_inputs(REGISTRY["FUSED_ADAMW"], n, seed=i)
+        want = oracle(inp["p"], inp["grad"], inp["m"], inp["v"])
+        assert len(res[i].outputs) == 3
+        for got, w in zip(res[i].outputs, want):
+            np.testing.assert_array_equal(got, np.asarray(w))
+
+
+def test_model_programs_batch_into_few_dispatches():
+    engine = _engine(max_batch=8)
+    sizes = [96, 100, 128, 64, 120, 80, 72, 56]   # all bucket to 128
+    _serve(engine, "LM_RMSNORM", sizes)
+    st = engine.stats()
+    assert st["n_requests"] == 8
+    assert st["n_dispatches"] == 1                # one bucket, one batch
+
+
+# ---------------------------------------------------------------------------
+# all compiler modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["best", "unfused"])
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_model_modes_agree(name, mode):
+    """best and unfused compile every model program to the same values
+    (mode changes the schedule, never the math)."""
+    prog = REGISTRY[name]
+    n = 64
+    cc = FusionCompiler(cache=None)
+    out = cc.compile(prog.script, prog.shapes(n), mode=mode)(
+        **make_inputs(prog, n, seed=2))
+    base = cc.compile(prog.script, prog.shapes(n), mode="best")(
+        **make_inputs(prog, n, seed=2))
+    if not isinstance(out, tuple):
+        out, base = (out,), (base,)
+    for o, b in zip(out, base):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_decode_attn_autotune_mode():
+    """The mixed-monoid graph survives the measured-cost search."""
+    prog = REGISTRY["LM_DECODE_ATTN"]
+    n = 64
+    cc = FusionCompiler(cache=PlanCache(), autotune_budget=2,
+                        autotune_reps=1, autotune_warmup=1)
+    compiled = cc.compile(prog.script, prog.shapes(n), mode="autotune")
+    inp = make_inputs(prog, n, seed=4)
+    got = np.asarray(compiled(**inp))
+    want = np.asarray(jax.jit(_attn_oracle)(
+        inp["q"], inp["K"], inp["V"], inp["scale"]))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+    assert cc.last_autotune is not None
+
+
+def test_engine_autotune_mode_serves_models():
+    engine = ServingEngine(
+        compiler=FusionCompiler(cache=PlanCache(), autotune_budget=2,
+                                autotune_reps=1, autotune_warmup=1),
+        max_batch=4, min_bucket=64, registry=REGISTRY, mode="autotune")
+    res = _serve(engine, "LM_RMSNORM", (96, 100))
+    for i, n in enumerate((96, 100)):
+        inp = make_inputs(REGISTRY["LM_RMSNORM"], n, seed=i)
+        want = np.asarray(_rmsnorm_oracle(inp["x"], inp["gamma"]))
+        np.testing.assert_array_equal(res[i].outputs[0], want)
+
+
+# ---------------------------------------------------------------------------
+# packed dispatch with masked members + mixed traffic
+# ---------------------------------------------------------------------------
+
+def test_packed_dispatch_with_masked_member():
+    """A pack mixing a masked program (decode attention) with plain
+    ones serves every member bitwise-identical to unpacked serving."""
+    names = ["LM_DECODE_ATTN", "LM_RMSNORM", "VADD"]
+    packed, unpacked = _engine(max_pack=8), _engine(max_pack=1)
+    for e in (packed, unpacked):
+        for nm in names:
+            e.warm(nm, [96], trace_batches=False, trace_packs=False)
+    reqs = [(nm, 96, make_inputs(REGISTRY[nm], 96, seed=i))
+            for i, nm in enumerate(names * 2)]
+    rp = {r.rid: r for r in packed.serve([(n, s, dict(i)) for n, s, i in reqs])}
+    ru = {r.rid: r for r in unpacked.serve([(n, s, dict(i)) for n, s, i in reqs])}
+    assert packed.n_packed_dispatches > 0
+    for rid in rp:
+        for a, b in zip(rp[rid].outputs, ru[rid].outputs):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_mixed_blas_and_model_traffic_one_engine():
+    """The combined registry serves paper sequences and model
+    workloads side by side in one drain."""
+    engine = _engine(max_batch=4)
+    reqs = []
+    expected = {}
+    for i, (nm, n) in enumerate([("ATAX", 96), ("LM_RMSNORM", 100),
+                                 ("WAXPBY", 128), ("FUSED_ADAMW", 100),
+                                 ("LM_DECODE_ATTN", 96), ("VADD", 64)]):
+        inp = make_inputs(REGISTRY[nm], n, seed=i)
+        reqs.append((nm, n, inp))
+        expected[i] = REGISTRY[nm].reference(
+            **{k: np.asarray(v, np.float64) for k, v in inp.items()})
+    res = {r.rid: r for r in engine.serve(reqs)}
+    assert len(res) == 6
+    for rid, refs in expected.items():
+        for o, r in zip(res[rid].outputs, refs):
+            np.testing.assert_allclose(np.asarray(o, np.float64), r,
+                                       rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# §9 open edge: ragged / subset drains memoize after first trace
+# ---------------------------------------------------------------------------
+
+def test_subset_drain_compositions_memoize():
+    """Draining a SUBSET of the warmed key set composes a new pack the
+    first time only: repeating the same subset re-uses the memoized
+    composition (no new ``_packs`` entry, no compiler miss)."""
+    names = ["LM_RMSNORM", "VADD", "SSCAL"]
+    engine = _engine(max_batch=2, max_pack=8)
+    for nm in names:
+        engine.warm(nm, [96], trace_batches=False, trace_packs=False)
+
+    def drain(subset, seed):
+        reqs = [(nm, 96, make_inputs(REGISTRY[nm], 96, seed=seed + j))
+                for j, nm in enumerate(subset)]
+        return engine.serve(reqs)
+
+    drain(names, 0)                       # full set -> one composition
+    n_full = len(engine._packs)
+    drain(["LM_RMSNORM", "VADD"], 10)     # new subset -> one more
+    n_sub = len(engine._packs)
+    assert n_sub == n_full + 1
+    misses = engine.compiler.cache.stats.program_misses
+    for s in range(3):                    # same subset again: all memoized
+        drain(["LM_RMSNORM", "VADD"], 20 + s)
+    assert len(engine._packs) == n_sub
+    assert engine.compiler.cache.stats.program_misses == misses
+
+
+def test_ragged_drain_bitwise_vs_unpacked():
+    """Ragged traffic (unequal request counts per key, forcing leftover
+    singleton rounds) over model + BLAS keys: packed engine output is
+    bitwise the max_pack=1 engine output, on every drain."""
+    counts = {"LM_RMSNORM": 3, "VADD": 1, "LM_DECODE_ATTN": 2}
+    packed, unpacked = _engine(max_batch=2, max_pack=8), \
+        _engine(max_batch=2, max_pack=1)
+    for e in (packed, unpacked):
+        for nm in counts:
+            e.warm(nm, [96], trace_batches=False, trace_packs=False)
+    for round_ in range(2):
+        reqs = [(nm, 96, make_inputs(REGISTRY[nm], 96, seed=17 * round_ + j))
+                for nm, c in counts.items() for j in range(c)]
+        rp = {r.rid: r for r in packed.serve(
+            [(n, s, dict(i)) for n, s, i in reqs])}
+        ru = {r.rid: r for r in unpacked.serve(
+            [(n, s, dict(i)) for n, s, i in reqs])}
+        for rid in rp:
+            for a, b in zip(rp[rid].outputs, ru[rid].outputs):
+                np.testing.assert_array_equal(a, b)

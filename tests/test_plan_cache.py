@@ -240,6 +240,46 @@ class TestCache:
         np.testing.assert_allclose(np.asarray(p1(a=x)), 2.0 * x)
         np.testing.assert_allclose(np.asarray(p2(a=x)), 3.0 * x)
 
+    def test_equal_closures_alias_one_program_entry(self):
+        """Structural closure fingerprints: two closures built at
+        different addresses but capturing equal content (nested
+        function, container, dataclass) must hash to ONE program-cache
+        entry — while a nested closure capturing a different value must
+        not alias it."""
+        import dataclasses
+
+        from repro.core.elementary import make_map
+
+        @dataclasses.dataclass
+        class Cfg:
+            gain: float
+            tags: tuple
+
+        def make_script(scale, bias):
+            def shift(x):
+                return x + bias              # nested closure cell
+            cfg = Cfg(gain=scale, tags=("a", {"k": 1}))
+            op = make_map("cfged", lambda x: cfg.gain * shift(x), arity=1)
+
+            def script(g, a):
+                return (g.apply(op, a),)
+            return script
+
+        cache = PlanCache()
+        cc = FusionCompiler(cache=cache)
+        p1 = cc.compile(make_script(2.0, 1.0), {"a": (256,)})
+        p2 = cc.compile(make_script(2.0, 1.0), {"a": (256,)})
+        assert p2 is p1                      # equal content -> one entry
+        assert cache.stats.program_hits == 1
+        # a nested closure cell with different CONTENT must miss (the
+        # pre-structural fingerprint keyed functions on bytecode only,
+        # which would alias these)
+        p3 = cc.compile(make_script(2.0, 5.0), {"a": (256,)})
+        assert p3 is not p1
+        x = np.arange(256, dtype=np.float32)
+        np.testing.assert_allclose(np.asarray(p1(a=x)), 2.0 * (x + 1.0))
+        np.testing.assert_allclose(np.asarray(p3(a=x)), 2.0 * (x + 5.0))
+
     def test_cache_disabled(self):
         cc = FusionCompiler(cache=None)
         seq = REGISTRY["VADD"]

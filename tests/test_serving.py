@@ -169,21 +169,29 @@ def test_map_into_max_reduce_refuses_to_pad():
 
 
 def test_drain_preserves_queue_on_compile_failure():
-    """A poison request (unpaddable graph) must not drop the other
-    queued requests: drain() restores the queue and re-raises."""
+    """A poison request (unpaddable AND unmaskable graph) must not drop
+    the other queued requests: drain() restores the queue and re-raises.
 
-    def bad_script(g, x, alpha):
+    map-into-MAX alone no longer poisons — the engine re-traces it
+    through the per-lane masking rewrite (DESIGN.md §10) — so the
+    poison here also pads two INDEPENDENT extents (n and n // 2), which
+    one ``_mask`` row cannot cover."""
+
+    def bad_script(g, x, y, alpha):
         s = g.apply(lib.scal, alpha, x)
-        return (g.apply(lib.max_reduce, s),)
+        t = g.apply(lib.max_reduce, s)
+        return (g.apply(lib.axpy, t, y, y),)
 
     bad = Sequence("BAD", "", bad_script,
-                   lambda n: {"x": (n,), "alpha": ()},
-                   lambda x, alpha: (np.max(alpha * x),), lambda n: float(n))
+                   lambda n: {"x": (n,), "y": (n // 2,), "alpha": ()},
+                   lambda x, y, alpha: (np.max(alpha * x) * y + y,),
+                   lambda n: float(n))
     registry = dict(REGISTRY)
     registry["BAD"] = bad
     engine = _engine(registry=registry)
     engine.submit("VADD", 100, make_inputs(REGISTRY["VADD"], 100, seed=0))
     engine.submit("BAD", 100, {"x": np.ones(100, np.float32),
+                               "y": np.ones(50, np.float32),
                                "alpha": np.float32(2.0)})
     with pytest.raises(ValueError, match="mask"):
         engine.drain()
