@@ -155,6 +155,10 @@ class _LRU:
     def pop(self, key: str):
         return self._d.pop(key, None)
 
+    def items(self):
+        """Snapshot of (key, value) pairs, LRU order (no touch)."""
+        return list(self._d.items())
+
     def __len__(self):
         return len(self._d)
 
@@ -358,6 +362,37 @@ class PlanCache:
         record after publishing its own — the convergence step of the
         calibration protocol (DESIGN.md §8)."""
         self._measurements.pop(key)
+
+    def group_records(self) -> list[dict]:
+        """Every per-group measurement record visible to this cache —
+        the in-memory layer plus (when a disk dir is set) all
+        ``*.meas.json`` entries — deduplicated by key.  This is the
+        store ``HardwareModel.refit`` regresses over; records of other
+        kinds sharing the measurement namespace (whole-program timings,
+        calibration) are filtered here AND re-checked by ``refit``, so
+        a mixed-generation cache dir never poisons the regression.
+        Unreadable disk entries are skipped, not healed: enumeration
+        must stay read-only so concurrent writers are undisturbed."""
+        recs: dict[str, dict] = {}
+        for key, rec in self._measurements.items():
+            if isinstance(rec, dict) and rec.get("kind") == "group":
+                recs[key] = rec
+        if self.disk_dir and os.path.isdir(self.disk_dir):
+            suffix = ".meas.json"
+            for name in sorted(os.listdir(self.disk_dir)):
+                if not name.endswith(suffix):
+                    continue
+                key = name[:-len(suffix)]
+                if key in recs:
+                    continue
+                try:
+                    with open(os.path.join(self.disk_dir, name)) as f:
+                        rec = json.load(f)
+                except (OSError, ValueError):
+                    continue
+                if isinstance(rec, dict) and rec.get("kind") == "group":
+                    recs[key] = rec
+        return list(recs.values())
 
     def drop_measurement(self, key: str):
         """Remove a measurement from memory AND disk.  For callers that

@@ -89,9 +89,6 @@ class FusionCompiler:
         #: report of the most recent autotune *search* this compiler ran
         #: (None until one runs; cache-served compiles don't update it)
         self.last_autotune: autotune.AutotuneReport | None = None
-        # winner program handoff from _plan_for to compile (the search
-        # already compiled+warmed it; don't pay codegen+trace twice)
-        self._autotune_prog = None
 
     # -- stages ------------------------------------------------------------
     def trace(self, script: Callable, input_shapes: dict[str, Sequence[int]]
@@ -141,6 +138,22 @@ class FusionCompiler:
             reps=self.autotune_reps, warmup=self.autotune_warmup)
         self.last_autotune = report
         return combo, plan
+
+    def refit_hardware(self) -> HardwareModel:
+        """Recalibrate this compiler's cost model from the cache's
+        accumulated per-group measurement records
+        (``HardwareModel.refit``, DESIGN.md §8) and adopt the result.
+
+        With no cache or an empty/too-small group table this is a
+        strict no-op (``self.hw`` unchanged, later compiles produce
+        bit-identical plans).  When the refit *does* change the
+        constants, the model's repr — a component of every plan and
+        program cache key — changes with it, so subsequent compiles
+        search fresh plans under the better predictor instead of
+        silently reusing analytic-era entries."""
+        if self.cache is not None:
+            self.hw = self.hw.refit(self.cache.group_records())
+        return self.hw
 
     # -- cache keys --------------------------------------------------------
     def _mode_key(self, mode):
@@ -283,7 +296,6 @@ class FusionCompiler:
         already decided (possibly by another process via the disk
         layer)."""
         cache = self.cache
-        self._autotune_prog = None
         plan = plan_key = None
         if cache is not None:
             plan_key = self._plan_key(g, backend, mode_key)
@@ -292,7 +304,6 @@ class FusionCompiler:
             space = self.space(g)
             if mode == "autotune":
                 _, plan = self._autotune(space, backend)
-                self._autotune_prog = self.last_autotune.winner_program
             else:
                 combo = self.search(space, mode, backend=backend)
                 plan = build_plan(g, combo, backend=backend)
@@ -364,12 +375,8 @@ class FusionCompiler:
 
         g = self.trace(script, input_shapes)
         plan = self._plan_for(g, mode, backend, mode_key)
-        # a fresh autotune search already compiled (and jit-warmed) the
-        # winner during measurement — reuse it instead of re-codegening
-        prog, self._autotune_prog = self._autotune_prog, None
-        if prog is None or prog.plan != plan:
-            prog = codegen.compile_plan(g, plan, hw=self.hw,
-                                        interpret=self.interpret)
+        prog = codegen.compile_plan(g, plan, hw=self.hw,
+                                    interpret=self.interpret)
         if cache is not None and pkey is not None:
             cache.put_program(pkey, prog)
         return prog
@@ -488,7 +495,6 @@ class FusionCompiler:
             g = self.trace(script, input_shapes)
             plans.append(self._plan_for(g, mode, backend, mode_key))
             graphs.append(g)
-        self._autotune_prog = None   # packed codegen never reuses the handoff
 
         perm = canonical_pack_order(plans)
         sorted_graphs = [graphs[i] for i in perm]

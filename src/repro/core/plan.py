@@ -324,6 +324,40 @@ def build_packed_plan(plans) -> "PackedPlan":
 # graph signature (content address of a trace)
 # ---------------------------------------------------------------------------
 
+def group_signature(g: Graph, f) -> str:
+    """Localized content address of ONE fused group (DESIGN.md §8).
+
+    Unlike ``graph_signature``, every reference is *local* to the
+    fusion: external inputs by position (shape/dtype only — names are
+    the program's ABI, not the group's), member calls by local index,
+    axis roots by position in the fusion's canonical axis list.  Two
+    groups with the same elementaries, dataflow, shapes and axis
+    pattern therefore hash identically **no matter which program they
+    were traced from** — which is what lets the per-group measured-cost
+    table transfer timings between programs sharing a fusion.
+    """
+    ext = {v: i for i, v in enumerate(f.external_inputs)}
+    local = {c.out: j for j, c in enumerate(f.calls)}
+    root_pos = {r: i for i, r in enumerate(f.axis_roots)}
+
+    def ref(v: Var):
+        if v in ext:
+            return ["x", ext[v]]
+        return ["c", local[v]]
+
+    payload = {
+        "inputs": [[list(v.shape), str(v.dtype)] for v in f.external_inputs],
+        "calls": [[c.elem.name, [ref(a) for a in c.args],
+                   list(c.axis_sizes),
+                   [root_pos[g.axis_root(a)] for a in c.axis_ids],
+                   list(c.out.shape), str(c.out.dtype)]
+                  for c in f.calls],
+        "outputs": [ref(v) for v in f.outputs],
+    }
+    blob = json.dumps(payload, separators=(",", ":")).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
 def graph_signature(g: Graph) -> str:
     """Hash of the traced program's structure: elementary names, dataflow
     edges, shapes, dtypes, unified axis pattern.  Var names are included

@@ -74,8 +74,22 @@ def serve_blas(args) -> dict:
     t_compile = time.perf_counter() - t0
     if args.autotune and cc.last_autotune is not None:
         print(cc.last_autotune.describe())
+    if args.refit:
+        # two-phase flow (DESIGN.md §8): the autotune pass populated the
+        # per-group measured-cost table; regress the predictor over it
+        # and recompile mode="best" under the refit model — the hw repr
+        # is a cache-key component, so this searches a fresh plan
+        hw_before = cc.hw
+        cc.refit_hardware()
+        print(f"refit: {hw_before.name} -> {cc.hw.name} "
+              f"(bw {hw_before.hbm_bw:.3g} -> {cc.hw.hbm_bw:.3g} B/s, "
+              f"launch {hw_before.launch_overhead_s:.3g} -> "
+              f"{cc.hw.launch_overhead_s:.3g} s, "
+              f"{len(cache.group_records())} group records)")
+        prog = cc.compile(seq.script, seq.shapes(args.n), mode="best")
     t0 = time.perf_counter()
-    cc.compile(seq.script, seq.shapes(args.n), mode=mode)  # warm: cache hit
+    cc.compile(seq.script, seq.shapes(args.n),
+               mode="best" if args.refit else mode)  # warm: cache hit
     t_recompile = time.perf_counter() - t0
 
     inputs = make_inputs(seq, args.n, seed=args.seed)
@@ -195,6 +209,11 @@ def main(argv=None):
     ap.add_argument("--budget", type=int, default=8,
                     help="autotune candidate budget (measurements per "
                     "program on a cold cache)")
+    ap.add_argument("--refit", action="store_true",
+                    help="after the autotune pass, refit the hardware "
+                    "model from the per-group measured-cost table "
+                    "(HardwareModel.refit) and serve the mode='best' "
+                    "plan searched under the refit predictor")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host CPU devices (sets XLA_FLAGS; "
                     "must run before jax initializes)")

@@ -10,10 +10,12 @@ import sys
 import numpy as np
 import pytest
 
-from repro.blas import REGISTRY, make_inputs
+from repro.blas import REGISTRY, elementary_lib as lib, make_inputs
 from repro.core import (FusionCompiler, HardwareModel, PlanCache,
-                        autotune_combination, best_combination,
-                        calibrate_hardware)
+                        autotune_combination, bandwidth_sweep,
+                        best_combination, build_plan, calibrate_hardware,
+                        codegen, enumerate_combinations, graph_signature,
+                        measure_group, measure_program, synthetic_inputs)
 from repro.core import autotune as autotune_mod
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -143,10 +145,10 @@ class TestMeasuredSearch:
             np.testing.assert_allclose(np.asarray(o), r,
                                        rtol=1e-4, atol=1e-3)
 
-    def test_winner_program_not_recompiled(self, monkeypatch):
-        """A cold autotune compile serves the winner program the
-        measurement loop already built (and jit-warmed) — codegen runs
-        once per candidate, not once more for the winner."""
+    def test_candidates_never_compiled_whole(self, monkeypatch):
+        """Per-group autotune times groups in isolation — it never
+        compiles candidate whole-programs.  ``codegen.compile_plan``
+        runs exactly once per autotune compile: for the winner."""
         from repro.core import codegen
         calls = {"n": 0}
         real = codegen.compile_plan
@@ -159,8 +161,12 @@ class TestMeasuredSearch:
         seq = REGISTRY["BiCGK"]
         cc = _tuned_compiler(PlanCache())
         prog = cc.compile(seq.script, seq.shapes(256), mode="autotune")
-        assert calls["n"] == len(cc.last_autotune.candidates)
-        assert prog is cc.last_autotune.winner_program
+        assert calls["n"] == 1
+        inputs = make_inputs(seq, 256, seed=7)
+        out = prog(**inputs)
+        for o, r in zip(out, seq.reference(**inputs)):
+            np.testing.assert_allclose(np.asarray(o), r,
+                                       rtol=1e-4, atol=1e-3)
 
     def test_report_candidates_in_predicted_order(self):
         seq = REGISTRY["GEMVER"]
@@ -172,8 +178,15 @@ class TestMeasuredSearch:
         assert preds == sorted(preds)
         assert [c.rank_pred for c in report.candidates] == list(
             range(len(preds)))
-        assert report.n_measured == len(report.candidates)
-        assert report.n_cached == 0
+        # every candidate is accounted for; at least the first needed a
+        # fresh timing (a later one may be fully covered by groups the
+        # earlier candidates measured — the mix-and-match transfer)
+        assert report.n_measured + report.n_cached == len(report.candidates)
+        assert report.n_measured >= 1
+        assert report.n_groups_measured >= 1
+        for c in report.candidates:
+            assert c.n_groups >= 1
+            assert 0 <= c.n_groups_cached <= c.n_groups
 
 
 # ---------------------------------------------------------------------------
@@ -193,6 +206,7 @@ class TestMeasuredCostCache:
             raise AssertionError("measured on a warm cache")
 
         monkeypatch.setattr(autotune_mod, "measure_program", boom)
+        monkeypatch.setattr(autotune_mod, "measure_callable", boom)
         # a *different* compiler instance: program layer still keys the
         # same request; the plan layer covers even a program-key miss
         _tuned_compiler(cache).compile(seq.script, seq.shapes(256),
@@ -201,35 +215,41 @@ class TestMeasuredCostCache:
 
     def test_disk_measurements_reused_across_compilers(self, tmp_path,
                                                        monkeypatch):
-        """Measured-cost disk entries are reused by a fresh compiler +
+        """Per-group disk records are reused by a fresh compiler +
         fresh cache: with the plan entries gone, the autotune search
-        re-runs but every candidate is served from the measured-cost
-        table — zero new measurements."""
+        re-runs but every group is served from the measured-cost
+        table — zero new measurements (``group_table_hit_rate == 1.0``,
+        the PR acceptance gate)."""
         seq = REGISTRY["GEMVER"]
         c1 = PlanCache(disk_dir=str(tmp_path))
         _tuned_compiler(c1).compile(seq.script, seq.shapes(256),
                                     mode="autotune")
-        n_cands = c1.stats.meas_writes
-        assert n_cands >= 2
+        n_rec = c1.stats.meas_writes          # one write per fused group
+        assert n_rec >= 2
         meas_files = [f for f in os.listdir(tmp_path)
                       if f.endswith(".meas.json")]
-        assert len(meas_files) == n_cands
+        assert len(meas_files) == n_rec
         for f in meas_files:
             rec = json.loads((tmp_path / f).read_text())
+            assert rec["kind"] == "group"
             assert rec["t_meas"] > 0 and math.isfinite(rec["t_meas"])
+            assert rec["traffic_bytes"] > 0 and rec["flops"] >= 0
         # drop the plans so the search itself must re-run
         for f in os.listdir(tmp_path):
             if f.endswith(".plan.json"):
                 os.unlink(tmp_path / f)
 
         def boom(*a, **k):
-            raise AssertionError("re-measured a cached candidate")
+            raise AssertionError("re-measured a cached group")
 
         monkeypatch.setattr(autotune_mod, "measure_program", boom)
+        monkeypatch.setattr(autotune_mod, "measure_callable", boom)
         c2 = PlanCache(disk_dir=str(tmp_path))
-        prog = _tuned_compiler(c2).compile(seq.script, seq.shapes(256),
-                                           mode="autotune")
-        assert c2.stats.meas_disk_hits == n_cands
+        cc2 = _tuned_compiler(c2)
+        prog = cc2.compile(seq.script, seq.shapes(256), mode="autotune")
+        assert cc2.last_autotune.group_table_hit_rate == 1.0
+        assert cc2.last_autotune.n_groups_measured == 0
+        assert c2.stats.meas_disk_hits == n_rec
         assert c2.stats.meas_writes == 0
         inputs = make_inputs(seq, 256, seed=5)
         out = prog(**inputs)
@@ -246,21 +266,25 @@ class TestMeasuredCostCache:
         cache = PlanCache(disk_dir=str(tmp_path))
         _tuned_compiler(cache, budget=2).compile(
             seq.script, seq.shapes(256), mode="autotune")
-        assert cache.stats.meas_writes == 2
+        n_rec = cache.stats.meas_writes       # groups of candidates 0..1
+        assert n_rec >= 2
 
         calls = {"n": 0}
-        real = autotune_mod.measure_program
+        real = autotune_mod.measure_callable
 
         def counting(*a, **k):
             calls["n"] += 1
             return real(*a, **k)
 
-        monkeypatch.setattr(autotune_mod, "measure_program", counting)
+        monkeypatch.setattr(autotune_mod, "measure_callable", counting)
         cc4 = _tuned_compiler(cache, budget=4)
         cc4.compile(seq.script, seq.shapes(256), mode="autotune")
-        assert cc4.last_autotune is not None          # plan key differs
-        assert cc4.last_autotune.n_cached == 2
-        assert calls["n"] == cc4.last_autotune.n_measured == 2
+        rep = cc4.last_autotune
+        assert rep is not None                        # plan key differs
+        assert rep.n_cached >= 2       # candidates 0..1 fully table-served
+        assert calls["n"] == rep.n_groups_measured    # only new groups
+        assert rep.n_groups_cached >= n_rec
+        assert cache.stats.meas_writes == n_rec + rep.n_groups_measured
 
     def test_wrong_schema_dict_entry_healed(self, tmp_path):
         """Regression: a dict record missing a finite t_meas (schema
@@ -270,6 +294,7 @@ class TestMeasuredCostCache:
         cache = PlanCache(disk_dir=str(tmp_path))
         _tuned_compiler(cache, budget=2).compile(
             seq.script, seq.shapes(256), mode="autotune")
+        n_rec = cache.stats.meas_writes
         # corrupt every measurement into valid-JSON wrong-shape dicts
         for f in os.listdir(tmp_path):
             if f.endswith(".meas.json"):
@@ -279,12 +304,14 @@ class TestMeasuredCostCache:
         c2 = PlanCache(disk_dir=str(tmp_path))
         cc2 = _tuned_compiler(c2, budget=2)
         cc2.compile(seq.script, seq.shapes(256), mode="autotune")
-        assert cc2.last_autotune.n_measured == 2       # healed, re-measured
-        assert c2.stats.meas_writes == 2               # republished
+        rep = cc2.last_autotune
+        assert rep.n_measured == len(rep.candidates)   # healed, re-measured
+        assert rep.n_groups_cached == 0
+        assert c2.stats.meas_writes == n_rec           # republished
         for f in os.listdir(tmp_path):
             if f.endswith(".meas.json"):
-                assert json.loads(
-                    (tmp_path / f).read_text())["t_meas"] > 0
+                rec = json.loads((tmp_path / f).read_text())
+                assert rec["kind"] == "group" and rec["t_meas"] > 0
 
     def test_non_dict_disk_entry_dropped_and_republished(self, tmp_path):
         """Regression: a valid-JSON but non-dict .meas.json must be
@@ -309,6 +336,189 @@ class TestMeasuredCostCache:
         # non-autotune modes are budget-independent (plans still shared)
         assert (cc2._config_key("jnp", cc2._mode_key("best"))
                 == cc4._config_key("jnp", cc4._mode_key("best")))
+
+    def test_legacy_program_records_still_serve(self, monkeypatch):
+        """Schema coexistence (DESIGN.md §8): whole-program records
+        written by the previous table schema (no ``kind`` field) still
+        serve program-level lookups exactly — a candidate they cover is
+        never re-measured, and the report says where its time came
+        from."""
+        seq = REGISTRY["VADD"]
+        cc = _tuned_compiler(cache=None, budget=2)
+        g = cc.trace(seq.script, seq.shapes(256))
+        space = cc.space(g)
+        combos = enumerate_combinations(space, limit=2)
+        cache = PlanCache()
+        fp = autotune_mod.hw_fingerprint(cc.backend, cc.interpret)
+        sig = graph_signature(g)
+        for i, combo in enumerate(combos):
+            plan = build_plan(g, combo, backend=cc.backend)
+            mk = autotune_mod.measurement_key(
+                sig, autotune_mod.combination_key(plan), fp)
+            cache.put_measurement(
+                mk, {"t_meas": (i + 1) * 1e-6, "reps": 1, "warmup": 1})
+
+        def boom(*a, **k):
+            raise AssertionError("measured despite legacy program records")
+
+        monkeypatch.setattr(autotune_mod, "measure_program", boom)
+        monkeypatch.setattr(autotune_mod, "measure_callable", boom)
+        _, _, report = autotune_combination(
+            space, hw=cc.hw, backend=cc.backend, interpret=cc.interpret,
+            cache=cache, budget=2, reps=1)
+        assert all(c.from_cache and c.source == "program"
+                   for c in report.candidates)
+        assert report.n_measured == 0
+        assert report.winner_index == 0        # legacy 1e-6 < 2e-6
+        assert report.winner.t_meas == pytest.approx(1e-6)
+
+    def test_group_records_filter_other_kinds(self, tmp_path):
+        """All three record generations share one measurement namespace
+        (one cache dir); ``group_records`` — the refit training set —
+        must return only the per-group generation."""
+        cache = PlanCache(disk_dir=str(tmp_path))
+        cache.put_measurement("aaa", {"t_meas": 1e-6, "reps": 1,
+                                      "warmup": 1})       # legacy program
+        cache.put_measurement("bbb", {"kind": "calibration",
+                                      "name": "calibrated_x",
+                                      "peak_flops": 1e11, "hbm_bw": 5e9,
+                                      "launch_overhead_s": 1e-5})
+        grec = {"kind": "group", "t_meas": 2e-6, "sig": "s",
+                "traffic_bytes": 100, "flops": 10}
+        cache.put_measurement("ccc", grec)
+        recs = cache.group_records()
+        assert recs == [grec]
+        # a fresh cache on the same dir sees only the disk copy, and
+        # enumeration is read-only (all three files still present)
+        assert PlanCache(disk_dir=str(tmp_path)).group_records() == [grec]
+        files = [f for f in os.listdir(tmp_path)
+                 if f.endswith(".meas.json")]
+        assert len(files) == 3
+
+
+# ---------------------------------------------------------------------------
+# differential oracle: per-group sums vs whole-program ground truth
+# ---------------------------------------------------------------------------
+
+class TestDifferentialOracle:
+    #: stated tolerance — the sum of per-group timings and the
+    #: whole-program timing must agree within this factor.  The two
+    #: disagree by (a) XLA optimizing across group boundaries when the
+    #: whole program jits as one executable and (b) residual per-call
+    #: dispatch cost, both bounded well inside 4x once sizes are large
+    #: enough that streaming compute dominates dispatch (the sizes
+    #: below put >= ~1MB of traffic in every group).
+    TOL = 4.0
+
+    @pytest.mark.parametrize("name,n", [
+        ("AXPYDOT", 1 << 20), ("BiCGK", 768), ("GEMVER", 768)])
+    def test_sum_of_group_times_tracks_whole_program(self, name, n):
+        seq = REGISTRY[name]
+        cc = FusionCompiler(cache=None)
+        g = cc.trace(seq.script, seq.shapes(n))
+        space = cc.space(g)
+        combo = best_combination(space)
+        plan = build_plan(g, combo, backend=cc.backend)
+        prog = codegen.compile_plan(g, plan, hw=cc.hw,
+                                    interpret=cc.interpret)
+        t_whole = measure_program(prog, synthetic_inputs(g),
+                                  reps=3, inner=4)
+        t_sum = sum(measure_group(g, im, backend=cc.backend,
+                                  interpret=cc.interpret, reps=3, inner=4)
+                    for im in combo.impls)
+        assert t_whole > 0 and t_sum > 0
+        ratio = t_sum / t_whole
+        assert 1 / self.TOL < ratio < self.TOL, (
+            f"{name}: sum-of-groups {t_sum*1e6:.1f}us vs whole "
+            f"{t_whole*1e6:.1f}us (ratio {ratio:.2f})")
+
+
+# ---------------------------------------------------------------------------
+# cross-program transfer: the point of localized group signatures
+# ---------------------------------------------------------------------------
+
+def _chain_script(g, a, b, c, s):
+    """Structurally AXPYDOT's chain (axmy -> ew_mul -> sum_reduce) under
+    different input/output names, traced as a different program."""
+    t = g.apply(lib.axmy, s, a, b, name="t")
+    m = g.apply(lib.ew_mul, t, c)
+    rr = g.apply(lib.sum_reduce, m, name="rr")
+    return t, rr
+
+
+class TestGroupTransfer:
+    def test_group_records_transfer_across_programs(self, monkeypatch):
+        """A group table populated by AXPYDOT serves a *different*
+        program sharing the same fused chain: zero new measurements
+        (localized signatures make group records program-independent)."""
+        n = 256
+        cache = PlanCache()
+        seq = REGISTRY["AXPYDOT"]
+        cc = _tuned_compiler(cache)
+        cc.compile(seq.script, seq.shapes(n), mode="autotune")
+        assert len(cache.group_records()) >= 1
+
+        def boom(*a, **k):
+            raise AssertionError("measured: group table should transfer")
+
+        monkeypatch.setattr(autotune_mod, "measure_program", boom)
+        monkeypatch.setattr(autotune_mod, "measure_callable", boom)
+        cc2 = _tuned_compiler(cache)
+        g2 = cc2.trace(_chain_script,
+                       {"a": (n,), "b": (n,), "c": (n,), "s": ()})
+        # a genuinely different program (graph signatures differ: input
+        # names are the call ABI) ...
+        g1 = cc.trace(seq.script, seq.shapes(n))
+        assert graph_signature(g2) != graph_signature(g1)
+        # ... yet every group is served from AXPYDOT's table
+        _, _, report = autotune_combination(
+            cc2.space(g2), hw=cc2.hw, backend=cc2.backend,
+            interpret=cc2.interpret, cache=cache, budget=3, reps=1)
+        assert report.n_groups_measured == 0
+        assert report.group_table_hit_rate == 1.0
+        assert report.n_groups_cached >= 1
+        assert all(c.from_cache and c.source == "groups"
+                   for c in report.candidates)
+
+
+# ---------------------------------------------------------------------------
+# calibration bandwidth sweep (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+class TestBandwidthSweep:
+    def test_sweep_finite_positive_stably_keyed(self):
+        sizes = (1 << 14, 1 << 15, 1 << 16)
+        s1 = bandwidth_sweep(reps=1, sizes=sizes)
+        # keys derive from sizes alone (bytes moved: read + write), so
+        # two sweeps key identically even though values jitter
+        assert sorted(s1) == [2 * 4 * n for n in sizes]
+        for bw in s1.values():
+            assert math.isfinite(bw) and bw > 0
+        s2 = bandwidth_sweep(reps=1, sizes=sizes)
+        assert sorted(s2) == sorted(s1)
+
+    def test_default_sweep_has_at_least_three_sizes(self):
+        assert len(autotune_mod.BW_SWEEP_SIZES) >= 3
+
+    def test_calibration_record_carries_sweep(self, tmp_path, monkeypatch):
+        """The published calibration record embeds the per-size sweep
+        (string byte-count keys — JSON-stable), so a fleet can audit
+        the roofline fit its constants came from."""
+        monkeypatch.setattr(autotune_mod, "_CALIBRATED", {})
+        cache = PlanCache(disk_dir=str(tmp_path))
+        hw = calibrate_hardware(force=True, cache=cache)
+        assert math.isfinite(hw.hbm_bw) and hw.hbm_bw > 0
+        files = [f for f in os.listdir(tmp_path)
+                 if f.endswith(".meas.json")]
+        assert len(files) == 1
+        rec = json.loads((tmp_path / files[0]).read_text())
+        assert rec["kind"] == "calibration"
+        sweep = rec["bw_sweep"]
+        assert len(sweep) >= 3
+        assert list(sweep) == sorted(sweep, key=int)
+        for k, v in sweep.items():
+            assert k == str(int(k))
+            assert math.isfinite(v) and v > 0
 
 
 AUTOTUNE_WARM_SCRIPT = """
@@ -354,6 +564,7 @@ def test_autotune_concurrent_writers(tmp_path, monkeypatch):
         raise AssertionError("measured despite a warm fleet cache")
 
     monkeypatch.setattr(autotune_mod, "measure_program", boom)
+    monkeypatch.setattr(autotune_mod, "measure_callable", boom)
     cache = PlanCache(disk_dir=d)
     cc = _tuned_compiler(cache, budget=2)
     for name in ("AXPYDOT", "VADD"):
@@ -380,6 +591,7 @@ class TestEngineWiring:
             raise AssertionError("batched compile re-measured")
 
         monkeypatch.setattr(autotune_mod, "measure_program", boom)
+        monkeypatch.setattr(autotune_mod, "measure_callable", boom)
         prog = cc.compile_batched(seq.script, seq.shapes(256),
                                   mode="autotune", max_batch=4)
         w, y, z = (np.random.default_rng(0)

@@ -137,3 +137,70 @@ def test_predictor_monotonic_in_traffic():
                 if (a.traffic_bytes <= b.traffic_bytes
                         and a.flops == b.flops):
                     assert a.t_pred <= b.t_pred + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# HardwareModel.refit — learning from the per-group measured-cost table
+# (DESIGN.md §8).  Stores are arbitrary well-formed group records; the
+# invariants are the strict fallback semantics the autotune loop relies
+# on: constants stay finite/positive whatever the store holds, and a
+# too-small store is a no-op returning the analytic model itself.
+# ---------------------------------------------------------------------------
+
+import math
+
+from repro.core import V5E
+
+group_record = st.fixed_dictionaries({
+    "kind": st.just("group"),
+    "t_meas": st.floats(1e-9, 1e-1, allow_nan=False, allow_infinity=False),
+    "traffic_bytes": st.integers(1, 10**10),
+    "flops": st.integers(0, 10**10),
+})
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(group_record, min_size=0, max_size=24))
+def test_refit_constants_finite_positive(records):
+    hw = V5E.refit(records)
+    for v in (hw.peak_flops, hw.hbm_bw, hw.launch_overhead_s, hw.f32_scale):
+        assert math.isfinite(v) and v > 0
+    # policy constants are never refit
+    assert hw.min_tile == V5E.min_tile
+    assert hw.vmem_bytes == V5E.vmem_bytes
+
+
+@settings(max_examples=20, deadline=None)
+@given(group_record)
+def test_refit_empty_and_singleton_are_noops(rec):
+    """Below the record minimum the refit is the identity — the SAME
+    analytic model object, so downstream cache keys (repr(hw)) are
+    bit-identical to never having refit at all."""
+    assert V5E.refit([]) is V5E
+    assert V5E.refit([rec]) is V5E
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(group_record, min_size=3, max_size=24))
+def test_refit_ignores_foreign_schemas(records):
+    """Records from other generations sharing the measurement namespace
+    (legacy whole-program, calibration, junk) never shift the fit."""
+    noise = [{"t_meas": 1e-6, "reps": 1},               # legacy program
+             {"kind": "calibration", "hbm_bw": 1.0},    # calibration
+             {"kind": "group"},                         # missing t_meas
+             {"kind": "group", "t_meas": float("nan"),
+              "traffic_bytes": 1, "flops": 1},          # non-finite
+             "not-a-dict", None, 42]
+    assert V5E.refit(records + noise) == V5E.refit(records)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(group_record, min_size=0, max_size=24),
+       st.integers(1, 10**10), st.integers(1, 10**10),
+       st.integers(0, 10**10))
+def test_group_cost_monotone_in_traffic(records, tr1, tr2, fl):
+    """At fixed flops, more traffic never predicts faster — for the
+    analytic model AND any model refit from a well-formed store."""
+    lo, hi = sorted((tr1, tr2))
+    for hw in (V5E, V5E.refit(records)):
+        assert hw.group_cost(lo, fl) <= hw.group_cost(hi, fl) + 1e-15
