@@ -90,6 +90,74 @@ def bench_xent(T: int, V: int, iters: int = 5) -> list[str]:
             f"speedup={t_u/max(t_f,1e-9):.2f}x 3_logit_streams"]
 
 
+def bench_backend_series(name: str, n: int, iters: int = 3) -> dict:
+    """Three-way series for one program: compiler-emitted pallas kernels
+    (interpret mode) vs the hand-written ``repro.kernels`` pallas
+    kernels (interpret mode) vs the compiler's jnp/XLA backend.
+
+    On this CPU container the pallas numbers go through the
+    interpreter, so absolute times measure structural parity (same
+    groups, same dispatch count), NOT TPU performance — the jnp series
+    is the wall-clock anchor.  Numerics of all three are cross-checked
+    (allclose) before timing."""
+    from repro.core import FusionCompiler
+    from repro.kernels import ops
+    from repro.programs import REGISTRY, make_inputs
+
+    prog = REGISTRY[name]
+    inputs = {k: jnp.asarray(v)
+              for k, v in make_inputs(prog, n, seed=0).items()}
+
+    def compiled(backend):
+        cc = FusionCompiler(backend=backend, interpret=True)
+        return cc.compile(prog.script, prog.shapes(n))
+
+    hand = {
+        "GEMVER": lambda i: ops.gemver(
+            i["A"], i["u1"], i["v1"], i["u2"], i["v2"], i["y"], i["z"],
+            i["alpha"], i["beta"], use_pallas=True),
+        "BiCGK": lambda i: ops.bicgk(i["A"], i["p"], i["r"],
+                                     use_pallas=True),
+        "LM_RMSNORM": lambda i: ops.rmsnorm(i["x"][None], i["gamma"],
+                                            use_pallas=True)[0],
+    }[name]
+
+    series = {}
+    p_jnp = compiled("jnp")
+    p_pl = compiled("pallas")
+    o_jnp = p_jnp(**inputs)
+    o_pl = p_pl(**inputs)
+    o_hand = hand(inputs)
+    flat = lambda o: o if isinstance(o, tuple) else (o,)
+    for a, b in zip(flat(o_pl), flat(o_jnp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-3)
+    for a, b in zip(flat(o_hand), flat(o_jnp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-3)
+    series["compiler_pallas_us"] = _t(lambda: p_pl(**inputs), iters=iters)
+    series["hand_pallas_us"] = _t(lambda: hand(inputs), iters=iters)
+    series["jnp_us"] = _t(lambda: p_jnp(**inputs), iters=iters)
+    series.update(name=name, n=n, n_groups=p_pl.n_groups)
+    return series
+
+
+def run_backend_series(quick: bool = False) -> tuple[list[str], list[dict]]:
+    """CSV rows + JSON records for the 3-way backend comparison."""
+    n = 256 if quick else 512
+    iters = 3 if quick else 5
+    rows, records = [], []
+    for name in ("GEMVER", "BiCGK", "LM_RMSNORM"):
+        r = bench_backend_series(name, n, iters)
+        records.append(r)
+        rows.append(
+            f"FUSED3_{name}_n{n},{r['jnp_us']:.1f},"
+            f"compiler_pallas={r['compiler_pallas_us']:.1f}us "
+            f"hand_pallas={r['hand_pallas_us']:.1f}us "
+            f"groups={r['n_groups']} (pallas=interpret-mode)")
+    return rows, records
+
+
 def run_all(quick: bool = False) -> list[str]:
     n = 1 << 20 if quick else 1 << 22
     iters = 3 if quick else 5
@@ -97,6 +165,7 @@ def run_all(quick: bool = False) -> list[str]:
     rows += bench_adamw(n, iters)
     rows += bench_rmsnorm(2048 if quick else 8192, 1024, iters)
     rows += bench_xent(512 if quick else 2048, 32000, iters)
+    rows += run_backend_series(quick)[0]
     return rows
 
 

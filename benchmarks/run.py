@@ -56,6 +56,11 @@ def main() -> None:
             "t_unfused_us": r["t_unfused_us"],
             "paper_speedup": r.get("paper_speedup"),
         })
+    # 3-way backend series (compiler-pallas vs hand-written kernels vs
+    # jnp) — computed before the JSON dump so it lands in the artifact
+    from benchmarks import fused_kernels
+    fk3_rows, fk3_records = fused_kernels.run_backend_series(
+        quick=args.quick)
     if args.emit_json:
         with open(args.emit_json, "w") as f:
             json.dump({"n": n, "iters": iters,
@@ -67,7 +72,8 @@ def main() -> None:
                                "container — compare trends, and trust "
                                "traffic_ratio/speedup_predicted for the "
                                "architecture-independent signal",
-                       "sequences": bench_rows}, f,
+                       "sequences": bench_rows,
+                       "backend_series": fk3_records}, f,
                       indent=1)
         print(f"BENCH_json,{len(bench_rows)},written:{args.emit_json}",
               file=sys.stderr)
@@ -95,8 +101,14 @@ def main() -> None:
               f"all={r['t_all_s']:.3f}s combos={r['n_combinations']}")
 
     # --- framework-side fused kernels (paper technique beyond BLAS) ---------
-    from benchmarks import fused_kernels
-    for row in fused_kernels.run_all(quick=args.quick):
+    fk_n = 1 << 20 if args.quick else 1 << 22
+    fk_iters = 3 if args.quick else 5
+    for row in (fused_kernels.bench_adamw(fk_n, fk_iters)
+                + fused_kernels.bench_rmsnorm(
+                    2048 if args.quick else 8192, 1024, fk_iters)
+                + fused_kernels.bench_xent(
+                    512 if args.quick else 2048, 32000, fk_iters)
+                + fk3_rows):
         print(row)
 
     # --- roofline summary (reads cached dry-run artifacts if present) -------

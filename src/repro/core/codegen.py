@@ -45,9 +45,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .elementary import Monoid
-from .fusion import Fusion
+from .fusion import Fusion, call_phases, consumed_reductions
 from .graph import Graph, Var
 from .plan import ExecutionPlan, PackedPlan, build_plan
 from .predictor import V5E, HardwareModel, Impl, accumulable, reduce_roots_of
@@ -92,11 +93,62 @@ def _monoid_sum(monoid: Monoid, x, axes):
 
 
 def _group_pallas_fn(g: Graph, impl: Impl, interpret: bool = True) -> Callable:
-    """Build the single pallas_call for one fused group."""
+    """Build the single pallas_call for one fused group.
+
+    Groups whose reductions are only *produced* (never consumed inside)
+    compile to the single-sweep kernel.  Groups consuming a finished
+    reduction in-kernel (fusion rule 2, relaxed) get a leading *phase*
+    grid axis: during phase p the consumed reductions assigned to phase
+    p accumulate into VMEM scratch buffers; from phase p+1 on, their
+    finished values are read back from scratch by the consuming calls.
+    Map values are recomputed every phase (rematerialization), and
+    every side effect — output write, scratch or output accumulation —
+    is gated on its call's phase with ``pl.when``, so an unfinished
+    accumulator is never observable.  This requires every consumed
+    reduction to be ``accumulable`` under the impl's grid order (reduce
+    axes an innermost suffix); ``enumerate_impls`` emits only such
+    orders, and a hand-built plan violating it raises
+    ``NotImplementedError`` — the group-split contract (DESIGN.md §2).
+    """
     f = impl.fusion
-    order, grid = impl.order, impl.grid
+    order, spatial_grid = impl.order, impl.grid
     pos = {r: i for i, r in enumerate(order)}
     blk = {r: b for r, b in zip(order, impl.blocks)}
+    group_names = "+".join(c.elem.name for c in f.calls)
+
+    consumed = consumed_reductions(f, g)
+    consumed_idx = {c.idx for c in consumed}
+    phase_of, n_phases = call_phases(f, g)
+    multi = n_phases > 1
+    gofs = 1 if multi else 0                 # leading phase grid axis
+    grid = ((n_phases,) + spatial_grid) if multi else spatial_grid
+
+    for c in consumed:
+        if not accumulable(c.out, f, g, order):
+            raise NotImplementedError(
+                f"pallas backend cannot emit group [{group_names}]: "
+                f"reduction '{c.elem.name}' is consumed in-kernel but its "
+                f"reduce axes are not the innermost suffix of grid order "
+                f"{order}, so no scratch accumulator can carry its "
+                f"finished value; use an accumulable order "
+                f"(enumerate_impls only emits those) or split the group")
+
+    # every value a call reads must be resolvable inside the kernel: an
+    # external input, an earlier map output, or a consumed reduction's
+    # scratch.  Anything else is a group shape this backend cannot emit
+    # — raise a clear error at build time, not a KeyError from the env
+    # dict mid-trace.
+    resolvable = set(f.external_inputs)
+    for c in f.calls:
+        bad = sorted({a.producer.elem.name for a in c.args
+                      if a not in resolvable and a.producer is not None})
+        if bad:
+            raise NotImplementedError(
+                f"pallas backend cannot emit group [{group_names}]: call "
+                f"'{c.elem.name}' consumes the output of {bad}, which "
+                f"never becomes visible inside the kernel")
+        if (not c.elem.is_reduction) or c.idx in consumed_idx:
+            resolvable.add(c.out)
 
     def roots_of(v: Var) -> tuple[int, ...]:
         return tuple(g.axis_root(a) for a in v.axis_ids)
@@ -104,6 +156,7 @@ def _group_pallas_fn(g: Graph, impl: Impl, interpret: bool = True) -> Callable:
     def make_index_map(vroots: tuple[int, ...], lead_zeros: int = 0,
                        lead_roots: tuple[int, ...] = ()):
         def index_map(*gids):
+            gids = gids[gofs:]               # the phase axis moves no blocks
             lead = tuple(gids[pos[r]] for r in lead_roots)
             body = tuple(gids[pos[r]] for r in vroots)
             return (0,) * lead_zeros + lead + body
@@ -142,53 +195,111 @@ def _group_pallas_fn(g: Graph, impl: Impl, interpret: bool = True) -> Callable:
                 out_shapes.append(jax.ShapeDtypeStruct(v.shape, v.dtype))
             out_mode.append(("acc", tuple(pos[r] for r in rr)))
         else:
-            lead = tuple(grid[pos[r]] for r in rr)
+            lead = tuple(spatial_grid[pos[r]] for r in rr)
             block = (1,) * len(rr) + tuple(blk[r] for r in vr)
             out_specs.append(pl.BlockSpec(
                 block, make_index_map(vr, lead_roots=rr)))
             out_shapes.append(jax.ShapeDtypeStruct(lead + v.shape, v.dtype))
             out_mode.append(("partial", tuple(range(len(rr)))))
 
+    # ---- scratch accumulators for consumed reductions ---------------------
+    # full-size VMEM buffers (padded to rank >= 2): the finished value of
+    # phase p, read back via dynamic block slices from phase p+1 on
+    scratch_shapes, scratch_at, scratch_roots = [], {}, {}
+    for c in consumed:
+        v = c.out
+        vr = roots_of(v)
+        shape = tuple(v.shape) + (1,) * max(0, 2 - len(v.shape))
+        scratch_at[c.idx] = len(scratch_shapes)
+        scratch_roots[c.idx] = vr
+        scratch_shapes.append(pltpu.VMEM(shape, v.dtype))
+
     n_in = len(f.external_inputs)
+    n_out = len(f.outputs)
     out_index = {v: i for i, v in enumerate(f.outputs)}
 
     def kernel(*refs):
-        in_refs, out_refs = refs[:n_in], refs[n_in:]
+        in_refs = refs[:n_in]
+        out_refs = refs[n_in:n_in + n_out]
+        scratch_refs = refs[n_in + n_out:]
+        phase = pl.program_id(0) if multi else None
         env: dict[Var, Any] = {}
         for v, ref, is_scalar in zip(f.external_inputs, in_refs, in_is_scalar):
             env[v] = ref[0, 0] if is_scalar else ref[...]
         for c in f.calls:
             val = c.elem.fn(*[env[a] for a in c.args])
-            if not c.elem.is_reduction:
-                env[c.out] = val  # legality: only pure-map values flow inside
+            gate = (phase == phase_of[c.idx]) if multi else None
+            if c.idx in consumed_idx:
+                # accumulate into scratch during this call's phase; the
+                # (possibly partial) value is read back from scratch, so
+                # consumers at later phases see the finished reduction
+                sref = scratch_refs[scratch_at[c.idx]]
+                vr = scratch_roots[c.idx]
+                idx = tuple(pl.dslice(pl.program_id(gofs + pos[r]) * blk[r],
+                                      blk[r]) for r in vr)
+                idx += (0,) * max(0, 2 - len(vr))
+                rr = reduce_roots_of(c.out, f, g)
+                is_first = functools.reduce(
+                    jnp.logical_and,
+                    [pl.program_id(gofs + pos[r]) == 0 for r in rr])
+
+                @pl.when(gate & is_first)
+                def _init_scratch(sref=sref, idx=idx, val=val):
+                    sref[idx] = val.astype(sref.dtype)
+
+                @pl.when(gate & jnp.logical_not(is_first))
+                def _acc_scratch(sref=sref, idx=idx, val=val,
+                                 m=c.elem.monoid):
+                    sref[idx] = m.combine(sref[idx], val.astype(sref.dtype))
+
+                env[c.out] = sref[idx]
+            elif not c.elem.is_reduction:
+                env[c.out] = val
             if c.out in out_index:
                 i = out_index[c.out]
                 mode, aux = out_mode[i]
                 ref = out_refs[i]
                 if mode == "map":
-                    ref[...] = val.astype(ref.dtype)
+                    if multi:
+                        @pl.when(gate)
+                        def _write(ref=ref, val=val):
+                            ref[...] = val.astype(ref.dtype)
+                    else:
+                        ref[...] = val.astype(ref.dtype)
                 elif mode == "acc":
                     if c.out.shape == ():
                         val = jnp.reshape(val, (1, 1))
                     is_first = functools.reduce(
                         jnp.logical_and,
-                        [pl.program_id(p) == 0 for p in aux])
+                        [pl.program_id(p + gofs) == 0 for p in aux])
+                    if multi:
+                        is_first = gate & is_first
+                        not_first = gate & jnp.logical_not(is_first)
+                    else:
+                        not_first = jnp.logical_not(is_first)
 
                     @pl.when(is_first)
                     def _init(ref=ref, val=val):
                         ref[...] = val.astype(ref.dtype)
 
-                    @pl.when(jnp.logical_not(is_first))
+                    @pl.when(not_first)
                     def _accum(ref=ref, val=val, m=c.elem.monoid):
                         ref[...] = m.combine(ref[...], val.astype(ref.dtype))
                 else:  # partial
                     lead = len(aux)
-                    ref[...] = jnp.reshape(val, (1,) * lead + val.shape
-                                           ).astype(ref.dtype)
+                    part = jnp.reshape(val, (1,) * lead + val.shape
+                                       ).astype(ref.dtype)
+                    if multi:
+                        @pl.when(gate)
+                        def _write_part(ref=ref, part=part):
+                            ref[...] = part
+                    else:
+                        ref[...] = part
 
     call = pl.pallas_call(
         kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
         out_shape=tuple(out_shapes), interpret=interpret,
+        scratch_shapes=tuple(scratch_shapes),
     )
 
     def run(*ext_vals):

@@ -6,11 +6,18 @@ Legality rules, transposed from CUDA thread blocks to Pallas grids:
 1. **Same iteration space.**  All calls in a fusion must iterate over the
    same unified axis set (paper: same thread-block-to-data mapping; also
    subsumes "never fuse different nesting depths", §3.2.3).
-2. **Reduces are sinks.**  The *finished* result of a reduction requires a
-   global barrier (= kernel boundary), so an edge producer→consumer inside
-   a fusion is legal only if the producer has no reduce axes (§3.2.2).
-   Partial reductions are accumulated inside the kernel; finished values
-   are only visible to later kernels.
+2. **Reduce consumption needs phases.**  The *finished* result of a
+   reduction is only available once its reduce axes complete, which on
+   CUDA meant a global barrier (= kernel boundary, §3.2.2).  On the
+   Pallas backend the barrier is a leading *phase* grid axis instead:
+   phase p accumulates the reduction into a VMEM scratch buffer, phase
+   p+1 reads the finished value back (DESIGN.md §2).  That requires a
+   grid order with every consumed reduction's reduce axes as an
+   innermost suffix, so a producer→consumer edge from a reduction is
+   legal iff the consumed reduce-axis sets form a chain under inclusion
+   (some order then serves them all).  Groups with no such order are
+   rejected here — the documented *group-split*: the partition search
+   simply covers those calls with smaller fusions.
 3. **Convexity.**  No path from a fusion member to another fusion member
    may leave the fusion (the outside node could not be scheduled).
 4. **Connectivity / usefulness.**  Members must be connected through
@@ -50,6 +57,38 @@ class Fusion:
         return f"Fusion[{names}]"
 
 
+def consumed_reductions(f: Fusion, g: Graph) -> tuple[CallNode, ...]:
+    """Reduction members whose output is consumed *inside* ``f`` — the
+    calls whose finished value a multi-phase pallas kernel must carry in
+    a VMEM scratch accumulator (rule 2, relaxed)."""
+    idxset = {c.idx for c in f.calls}
+    return tuple(c for c in f.calls if c.elem.is_reduction
+                 and any(cc.idx in idxset for cc in g.consumers(c.out)))
+
+
+def call_phases(f: Fusion, g: Graph) -> tuple[dict[int, int], int]:
+    """Phase assignment for a (possibly multi-phase) kernel body.
+
+    ``phase(c)`` is the max over c's in-fusion producers p of
+    ``phase(p) + 1`` if p is a consumed reduction (its finished value
+    only becomes visible one full grid sweep later) else ``phase(p)``;
+    calls fed only by external inputs are phase 0.  Returns
+    ``(call idx -> phase, n_phases)``; ``n_phases == 1`` means the
+    group needs no phase axis (the single-sweep kernel)."""
+    consumed = {c.idx for c in consumed_reductions(f, g)}
+    producer = {c.out: c for c in f.calls}
+    phase: dict[int, int] = {}
+    for c in f.calls:
+        p = 0
+        for a in c.args:
+            pc = producer.get(a)
+            if pc is not None:
+                p = max(p, phase[pc.idx] + (1 if pc.idx in consumed else 0))
+        phase[c.idx] = p
+    n_phases = 1 + (max(phase.values()) if phase else 0)
+    return phase, n_phases
+
+
 def _reachability(g: Graph) -> dict[int, set[int]]:
     """call idx -> set of call idxs reachable (downstream)."""
     reach: dict[int, set[int]] = {c.idx: set() for c in g.calls}
@@ -83,12 +122,25 @@ def analyse_group(g: Graph, members: Iterable[CallNode],
         for r, s in zip(g.call_axis_roots(c), c.axis_sizes):
             root_to_size[r] = s
 
-    # rule 2: reduce outputs may not be consumed inside the fusion
+    # rule 2 (relaxed): a reduction output consumed inside the fusion is
+    # legal iff every consumed reduce-axis set can sit as an innermost
+    # suffix of ONE grid order — i.e. the consumed sets form a chain
+    # under inclusion.  Codegen then emits a multi-phase kernel carrying
+    # the finished value in VMEM scratch; otherwise the group is
+    # rejected and the partition search falls back to smaller fusions
+    # (the documented group-split, DESIGN.md §2).
+    rootset = set(ref_roots)
+    consumed_sets: list[set[int]] = []
     for c in members:
-        if c.elem.is_reduction:
-            for consumer in g.consumers(c.out):
-                if consumer.idx in idxset:
-                    return None
+        if not c.elem.is_reduction:
+            continue
+        if any(cc.idx in idxset for cc in g.consumers(c.out)):
+            out_roots = {g.axis_root(a) for a in c.out.axis_ids}
+            consumed_sets.append(rootset - out_roots)
+    consumed_sets.sort(key=len)
+    for small, big in zip(consumed_sets, consumed_sets[1:]):
+        if not small <= big:
+            return None
 
     # rule 3: convexity
     if reach is None:

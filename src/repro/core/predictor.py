@@ -27,7 +27,7 @@ import math
 
 import numpy as np
 
-from .fusion import Fusion
+from .fusion import Fusion, call_phases, consumed_reductions
 from .graph import Graph, Var
 
 #: a refit needs at least this many group records before the regression
@@ -282,10 +282,18 @@ def cost_impl(f: Fusion, g: Graph, order: tuple[int, ...],
     grid = tuple(-(-sizes[a] // b) for a, b in zip(order, blocks))
     blk = dict(zip(order, blocks))
 
+    # in-kernel reduce consumption forces a leading phase grid axis: the
+    # kernel re-streams every input and recomputes every map value once
+    # per phase (rematerialization — DESIGN.md §2), so inputs and flops
+    # are charged n_phases times; each consumed reduction additionally
+    # holds its FULL finished value in a VMEM scratch accumulator
+    consumed = consumed_reductions(f, g)
+    n_phases = call_phases(f, g)[1] if consumed else 1
+
     # ---- traffic ----------------------------------------------------------
     traffic = 0.0
     for v in f.external_inputs:
-        traffic += v.nbytes * var_streams(v, g, order, grid)
+        traffic += v.nbytes * var_streams(v, g, order, grid) * n_phases
     for v in f.outputs:
         rr = reduce_roots_of(v, f, g)
         if not rr or accumulable(v, f, g, order):
@@ -295,7 +303,7 @@ def cost_impl(f: Fusion, g: Graph, order: tuple[int, ...],
             traffic += v.nbytes * (2 * nparts + 1)  # write parts, read parts, write final
 
     # ---- flops ------------------------------------------------------------
-    flops = sum(c.elem.flops(c.axis_sizes) for c in f.calls)
+    flops = n_phases * sum(c.elem.flops(c.axis_sizes) for c in f.calls)
 
     # ---- VMEM footprint (double-buffered blocks) ---------------------------
     def block_bytes(v: Var) -> float:
@@ -313,6 +321,11 @@ def cost_impl(f: Fusion, g: Graph, order: tuple[int, ...],
         vmem += 2 * block_bytes(v)
     for v in f.internal_vars:
         vmem += block_bytes(v)
+    for c in consumed:
+        # full-size scratch accumulator carrying the finished reduction
+        v = c.out
+        sub, lane = hw.min_tile_for(v.dtype)
+        vmem += max(v.nbytes, v.dtype.itemsize * sub * lane)
 
     dt = fusion_dtype(f)
     t_t = traffic / hw.hbm_bw
@@ -329,11 +342,21 @@ def enumerate_impls(f: Fusion, g: Graph, hw: HardwareModel = V5E,
 
     Pruning (paper §4.2): drop implementations that exceed the VMEM
     budget (the occupancy analogue) and Pareto-dominated ones.
+
+    Fusions that consume a reduction in-kernel (fusion rule 2, relaxed)
+    only admit grid orders under which every consumed reduction is
+    ``accumulable`` (reduce axes an innermost suffix) — the orders the
+    multi-phase pallas kernel can actually emit.  Rule 2's chain
+    condition guarantees at least one such order exists; if VMEM
+    pruning still empties the list, ``build_space`` drops the fusion
+    and the partition search covers its calls with smaller groups (the
+    group-split fallback, DESIGN.md §2).
     """
     roots, sizes = f.axis_roots, f.axis_sizes
     depth = len(roots)
     dt = fusion_dtype(f)
     min_tile = hw.min_tile_for(dt)
+    consumed = consumed_reductions(f, g)
     cands: list[Impl] = []
     if depth == 1:
         min_b = min_tile[1]
@@ -350,6 +373,9 @@ def enumerate_impls(f: Fusion, g: Graph, hw: HardwareModel = V5E,
         ]
         for order in itertools.permutations(range(depth)):
             o_roots = tuple(roots[i] for i in order)
+            if consumed and any(not accumulable(c.out, f, g, o_roots)
+                                for c in consumed):
+                continue  # the phase kernel cannot carry the value
             for bs in itertools.product(*(blocks_per_axis[i] for i in order)):
                 cands.append(cost_impl(f, g, o_roots, bs, hw))
 

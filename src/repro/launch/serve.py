@@ -12,6 +12,14 @@ function.
     PYTHONPATH=src python -m repro.launch.serve --blas GEMVER \
         --requests 200 --n 1024
 
+``--backend pallas`` serves the same program through the pallas backend
+instead — every fused group one ``pl.pallas_call`` (interpret mode
+off-TPU), including multi-phase kernels that consume finished
+reductions in-kernel (DESIGN.md §2):
+
+    PYTHONPATH=src python -m repro.launch.serve --blas ATAX \
+        --backend pallas --requests 4 --n 256
+
 Empirical autotuning (DESIGN.md §8): ``--autotune`` compiles with
 ``mode="autotune"`` — the top ``--budget`` predicted combinations are
 measured on a calibrated hardware model and the measured winner is
@@ -67,7 +75,8 @@ def serve_blas(args) -> dict:
     # calibrated constants make the predicted candidate ordering (which
     # the autotune budget is spent on) meaningful off-TPU
     hw = "calibrate" if args.autotune else V5E
-    cc = FusionCompiler(cache=cache, hw=hw, autotune_budget=args.budget)
+    cc = FusionCompiler(cache=cache, hw=hw, autotune_budget=args.budget,
+                        backend=args.backend)
 
     t0 = time.perf_counter()
     prog = cc.compile(seq.script, seq.shapes(args.n), mode=mode)
@@ -138,13 +147,14 @@ def serve_engine(args) -> dict:
         # sharded engine pins max_pack=1 (DESIGN.md §9 open edge)
         engine = ShardedServingEngine(compiler=cc, max_batch=args.max_batch,
                                       min_bucket=min(64, min(sizes)),
-                                      mode=mode)
+                                      mode=mode, backend=args.backend)
         print(f"sharded engine: {engine.n_replicas} replicas, "
               f"max_batch {engine.max_batch}")
     else:
         engine = ServingEngine(compiler=cc, max_batch=args.max_batch,
                                min_bucket=min(64, min(sizes)), mode=mode,
-                               max_pack=args.max_pack)
+                               max_pack=args.max_pack,
+                               backend=args.backend)
     t0 = time.perf_counter()
     # warm packs once over the full key set, not per sequence
     buckets = {nm: engine.warm(nm, sizes, trace_packs=False) for nm in names}
@@ -198,6 +208,10 @@ def main(argv=None):
     ap.add_argument("--engine", action="store_true",
                     help="batched ServingEngine (shape buckets + vmap) "
                     "over a mixed-size workload")
+    ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp",
+                    help="codegen backend for --blas serving: 'jnp' "
+                    "(XLA sub-functions) or 'pallas' (one pallas_call "
+                    "per fused group; interpret mode off-TPU)")
     ap.add_argument("--sharded", action="store_true",
                     help="with --engine: shard dispatches over the "
                     "'data' axis of a replica mesh (DESIGN.md §7)")

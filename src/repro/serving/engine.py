@@ -215,6 +215,10 @@ class ServingEngine:
       max_pack: most ``(sequence, bucket)`` batches merged into one
         packed dispatch per drain round (DESIGN.md §9); ``1`` disables
         packing and restores one dispatch per batch.
+      backend: ``'jnp'`` or ``'pallas'`` — per-engine override passed
+        through to every bucket/pack compile; ``None`` (default) uses
+        the compiler's own backend.  Masked programs compile on either
+        backend (the masking elementaries are ordinary maps).
 
     Example::
 
@@ -227,7 +231,8 @@ class ServingEngine:
     def __init__(self, compiler: FusionCompiler | None = None,
                  max_batch: int = 8, min_bucket: int = 128,
                  registry: Mapping[str, Any] | None = None,
-                 mode: str = "best", max_pack: int = 8):
+                 mode: str = "best", max_pack: int = 8,
+                 backend: str | None = None):
         if registry is None:
             from ..blas import REGISTRY
             registry = REGISTRY
@@ -238,6 +243,9 @@ class ServingEngine:
         self.min_bucket = min_bucket
         self.mode = mode
         self.max_pack = max_pack
+        #: per-engine backend override ('jnp' / 'pallas'); None defers
+        #: to the compiler's own default
+        self.backend = backend
         self.registry = registry
         self._programs: dict[tuple[str, int], BatchedProgram] = {}
         # (script, shapes, pad values, masked?) per key — the masked
@@ -302,7 +310,8 @@ class ServingEngine:
             script, shapes, pads, _ = self._compile_specs(sequence, bucket)
             prog = self.compiler.compile_batched(
                 script, shapes, max_batch=self.max_batch,
-                mode=self.mode, bucket=f"{sequence}/{bucket}")
+                mode=self.mode, backend=self.backend,
+                bucket=f"{sequence}/{bucket}")
             self._pad_values[key] = pads
             self._programs[key] = prog
         return prog, self._pad_values[key]
@@ -316,6 +325,7 @@ class ServingEngine:
             dispatch = self.compiler.compile_packed(
                 [self._compile_specs(s, b)[:2] for s, b in members],
                 max_batch=self.max_batch, mode=self.mode,
+                backend=self.backend,
                 bucket="pack/" + "+".join(f"{s}/{b}" for s, b in members))
             self._packs[members] = dispatch
         return dispatch
@@ -665,7 +675,8 @@ class ShardedServingEngine(ServingEngine):
     def __init__(self, mesh=None, *, compiler: FusionCompiler | None = None,
                  max_batch: int = 8, min_bucket: int = 128,
                  registry: Mapping[str, Any] | None = None,
-                 axis: str = "data", mode: str = "best"):
+                 axis: str = "data", mode: str = "best",
+                 backend: str | None = None):
         from ..dist.sharding import mesh_axis_sizes
         if mesh is None:
             from ..launch.mesh import make_data_mesh
@@ -683,7 +694,7 @@ class ShardedServingEngine(ServingEngine):
         super().__init__(compiler=compiler,
                          max_batch=self.n_replicas * self.rows_cap,
                          min_bucket=min_bucket, registry=registry,
-                         mode=mode, max_pack=1)
+                         mode=mode, max_pack=1, backend=backend)
         self.replica_rows = [0] * self.n_replicas
 
     def _get_program(self, sequence: str, bucket: int
@@ -697,7 +708,8 @@ class ShardedServingEngine(ServingEngine):
             prog = self.compiler.compile_sharded(
                 script, shapes, mesh=self.mesh,
                 axis=self.axis, max_batch=self.max_batch,
-                mode=self.mode, bucket=f"{sequence}/{bucket}")
+                mode=self.mode, backend=self.backend,
+                bucket=f"{sequence}/{bucket}")
             self._pad_values[key] = pads
             self._programs[key] = prog
         return prog, self._pad_values[key]

@@ -17,12 +17,26 @@ def _graph(name, n=256):
 
 
 class TestLegality:
-    def test_atax_not_fusible(self):
-        """Paper §5.1: ATAX needs a global barrier between the two
-        matvecs (t is a finished reduction) — no 2-call fusion exists."""
+    def test_atax_fusible_via_phases(self):
+        """Paper §5.1 put a global barrier between ATAX's two matvecs
+        (y = A^T (A x): the second consumes the first's finished
+        reduction).  The relaxed rule 2 admits the pair — the pallas
+        backend replaces the barrier with a phase grid axis and a VMEM
+        scratch accumulator — because the consumed reduce-axis sets
+        ({j}) form a chain under inclusion."""
         g = _graph("ATAX")
         fusions = enumerate_fusions(g)
-        assert all(len(f.calls) == 1 for f in fusions)
+        pairs = [f for f in fusions if len(f.calls) == 2]
+        assert len(pairs) == 1
+        f = pairs[0]
+        assert [c.elem.name for c in f.calls] == ["gemv", "gemtv"]
+        from repro.core.fusion import call_phases, consumed_reductions
+        consumed = consumed_reductions(f, g)
+        assert [c.elem.name for c in consumed] == ["gemv"]
+        phase_of, n_phases = call_phases(f, g)
+        assert n_phases == 2
+        assert phase_of[f.calls[0].idx] == 0
+        assert phase_of[f.calls[1].idx] == 1
 
     def test_bicgk_fusible(self):
         """Paper §4.4: gemv+gemtv share A and both reduce — fusible."""
@@ -30,13 +44,17 @@ class TestLegality:
         fusions = enumerate_fusions(g)
         assert any(len(f.calls) == 2 for f in fusions)
 
-    def test_reduce_is_sink(self):
-        """A reduce's consumer can never join its fusion (§3.2.2)."""
+    def test_reduce_consumer_needs_same_axes(self):
+        """Consuming a finished reduction in-kernel is now legal (rule 2
+        relaxed, multi-phase codegen) — but only when the consumer
+        iterates the same unified axis set (rule 1 still applies)."""
         g = _graph("AXPYDOT")
         # calls: axmy(0), ew_mul(1), sum_reduce(2); nothing consumes the
         # reduce inside this graph, so the 3-fusion is legal
         assert analyse_group(g, g.calls) is not None
-        # but in SGEMVT, xpay consumes gemtv's finished reduction:
+        # in SGEMVT, xpay consumes gemtv's finished reduction — but
+        # gemtv iterates {i, j} while xpay iterates {j} only, so rule 1
+        # (same iteration space) rejects the pair regardless of phases:
         g2 = _graph("SGEMVT")
         gemtv_call = g2.calls[0]
         xpay_call = g2.calls[1]

@@ -107,6 +107,42 @@ def test_random_scripts_any_combination_matches(spec, rank):
                                    rtol=1e-4, atol=1e-4)
 
 
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.booleans(), st.booleans(), st.booleans(),
+       st.integers(0, 5), st.sampled_from([32, 64]))
+def test_synthetic_chain_backends_agree(n_calls, reduce_consume, gemv,
+                                        scalar_input, rank, n):
+    """Arbitrary synthetic chains — optionally with reduce→consume
+    links (the multi-phase pallas path), an ATAX-shaped gemv pair, and
+    scalar/(1,1)-carrier inputs — agree across backends for arbitrary
+    legal combinations and shapes."""
+    from repro.blas import make_synthetic_chain
+    script, shapes_fn, reference = make_synthetic_chain(
+        n_calls, reduce_consume=reduce_consume, gemv=gemv,
+        scalar_input=scalar_input)
+    shapes = shapes_fn(n)
+    g = trace(script, shapes)
+    space = build_space(g)
+    combos = enumerate_combinations(space, limit=rank + 1)
+    combo = combos[min(rank, len(combos) - 1)]
+    rng = np.random.default_rng(n_calls * 1000 + rank)
+    inputs = {k: (np.float32(rng.uniform(0.5, 1.5)) if s == ()
+                  else rng.standard_normal(s).astype(np.float32))
+              for k, s in shapes.items()}
+    want = reference(**inputs)
+    jnp_prog = codegen.compile_combination(g, combo, backend="jnp")
+    pl_prog = codegen.compile_combination(g, combo, backend="pallas")
+    jnp_out = jnp_prog(**inputs)
+    pl_out = pl_prog(**inputs)
+    if not isinstance(jnp_out, tuple):
+        jnp_out, pl_out = (jnp_out,), (pl_out,)
+    for o_p, o_j, w in zip(pl_out, jnp_out, want):
+        np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_j),
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(o_j), np.asarray(w),
+                                   rtol=1e-3, atol=1e-3)
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.integers(1, 4096), st.floats(1e-6, 1e4))
 def test_quantize_roundtrip_bound(n, scale):
