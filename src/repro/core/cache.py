@@ -53,12 +53,15 @@ from __future__ import annotations
 import collections
 import dataclasses
 import json
+import logging
 import os
 import tempfile
 import time
 from typing import Any
 
 from .plan import ExecutionPlan, PackedPlan
+
+log = logging.getLogger("repro.cache")
 
 _ENV_DIR = "REPRO_PLAN_CACHE_DIR"
 
@@ -205,12 +208,15 @@ class PlanCache:
             try:
                 with open(path) as f:
                     plan = ExecutionPlan.from_json(f.read())
-            except (OSError, ValueError):
+            except Exception as e:  # noqa: BLE001 — any load failure heals
                 plan = None  # stale/corrupt entry: fall through to a miss
+                log.warning("dropping corrupt plan cache entry %s: %s "
+                            "[RPL311]", path, e)
                 try:
                     # drop it so the first-writer-wins put_plan can
                     # republish — otherwise a bad entry (old plan
-                    # version, disk-full truncation) poisons its key
+                    # version, disk-full truncation, foreign schema)
+                    # poisons its key
                     os.unlink(path)
                 except OSError:
                     pass
@@ -295,8 +301,15 @@ class PlanCache:
             try:
                 with open(path) as f:
                     packed = PackedPlan.from_json(f.read())
-            except (OSError, ValueError):
+            except Exception as e:  # noqa: BLE001 — any load failure heals
+                # self-heal like the plan/measurement layers: a member
+                # with a missing field raises KeyError, a non-canonical
+                # member order raises through __post_init__ — all of it
+                # must read as "corrupt entry", never escape to the
+                # compile path
                 packed = None     # stale/corrupt: drop so put can republish
+                log.warning("dropping corrupt pack cache entry %s: %s "
+                            "[RPL312]", path, e)
                 try:
                     os.unlink(path)
                 except OSError:
@@ -315,6 +328,29 @@ class PlanCache:
         if path and self._publish(path, packed.to_json()):
             self.stats.pack_writes += 1
 
+    def drop_plan(self, key: str):
+        """Remove a plan from memory AND disk — the heal step when the
+        always-on verifier rejects a cache-served plan.  Without the
+        unlink, first-writer-wins would keep the bad file and poison
+        the key for every cache-sharing process."""
+        self._plans.pop(key)
+        path = self._disk_path(key)
+        if path:
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+
+    def drop_packed_plan(self, key: str):
+        """Packed-plan analogue of :meth:`drop_plan`."""
+        self._packs.pop(key)
+        path = self._pack_path(key)
+        if path:
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+
     # -- measurement layer (autotune measured costs, DESIGN.md §8) -----------
     def _meas_path(self, key: str) -> str | None:
         if not self.disk_dir:
@@ -331,8 +367,10 @@ class PlanCache:
             try:
                 with open(path) as f:
                     rec = json.load(f)
-            except (OSError, ValueError):
+            except (OSError, ValueError) as e:
                 rec = None
+                log.warning("unreadable measurement cache entry %s: %s "
+                            "[RPL313]", path, e)
             if not isinstance(rec, dict):
                 # stale/corrupt/wrong-shape entry: drop it so the
                 # first-writer-wins put_measurement can republish —

@@ -47,6 +47,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .diagnostics import UnsupportedGroupError, VerificationError
 from .elementary import Monoid
 from .fusion import Fusion, call_phases, consumed_reductions
 from .graph import Graph, Var
@@ -125,7 +126,8 @@ def _group_pallas_fn(g: Graph, impl: Impl, interpret: bool = True) -> Callable:
 
     for c in consumed:
         if not accumulable(c.out, f, g, order):
-            raise NotImplementedError(
+            raise UnsupportedGroupError.single(
+                "RPL214", f"plan.group[{group_names}]",
                 f"pallas backend cannot emit group [{group_names}]: "
                 f"reduction '{c.elem.name}' is consumed in-kernel but its "
                 f"reduce axes are not the innermost suffix of grid order "
@@ -143,7 +145,8 @@ def _group_pallas_fn(g: Graph, impl: Impl, interpret: bool = True) -> Callable:
         bad = sorted({a.producer.elem.name for a in c.args
                       if a not in resolvable and a.producer is not None})
         if bad:
-            raise NotImplementedError(
+            raise UnsupportedGroupError.single(
+                "RPL214", f"plan.group[{group_names}]",
                 f"pallas backend cannot emit group [{group_names}]: call "
                 f"'{c.elem.name}' consumes the output of {bad}, which "
                 f"never becomes visible inside the kernel")
@@ -438,7 +441,9 @@ def _group_fns(g: Graph, plan: ExecutionPlan, impls: list[Impl],
         elif plan.backend == "pallas":
             fns.append(_group_pallas_fn(g, im, interpret=interpret))
         else:
-            raise ValueError(f"unknown backend {plan.backend}")
+            raise VerificationError.single(
+                "RPL401", "plan.backend",
+                f"unknown backend {plan.backend}")
     return fns
 
 

@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import logging
+import os
 import time
 from typing import Callable, Sequence
 
@@ -28,13 +30,26 @@ import numpy as np
 
 from . import autotune, codegen, graph, scheduler
 from .cache import PlanCache, default_cache
+from .diagnostics import (KNOWN_BACKENDS, VerificationError, diag,
+                          raise_if_errors)
 from .plan import (build_packed_plan, build_plan, canonical_pack_order,
                    graph_signature, pack_signature, plan_fingerprint)
 from .predictor import V5E, HardwareModel
 from .scheduler import Combination, OptimizationSpace
 
+log = logging.getLogger("repro.compiler")
+
 #: search modes with names (integer ranks are also accepted)
 MODES = ("best", "unfused", "autotune")
+
+#: env var switching every compiler to the FULL verification pass
+#: (graph-bound plan checks on every compile) — the test suite sets it
+VERIFY_ENV = "REPRO_VERIFY"
+
+
+def _env_verify() -> bool:
+    return os.environ.get(VERIFY_ENV, "").strip().lower() not in (
+        "", "0", "false", "no")
 
 
 @dataclasses.dataclass
@@ -60,13 +75,26 @@ class FusionCompiler:
                  cache: PlanCache | bool | None = True,
                  autotune_budget: int = 8,
                  autotune_reps: int = autotune.MEAS_REPS,
-                 autotune_warmup: int = autotune.MEAS_WARMUP):
+                 autotune_warmup: int = autotune.MEAS_WARMUP,
+                 verify: bool | None = None):
         """``hw`` takes a HardwareModel or the string ``"calibrate"``
         (micro-benchmark this machine, ``HardwareModel.calibrate``).
         ``autotune_budget`` is how many predicted-best candidates
         ``mode="autotune"`` measures; it is part of the autotune cache
         keys (a bigger budget is a different — more thorough — search),
-        while reps/warmup are measurement discipline only."""
+        while reps/warmup are measurement discipline only.
+
+        ``verify`` selects the static-verification depth (DESIGN.md
+        §11).  ``False``/default: the cheap always-on subset still runs
+        on every cache-served plan (structural + signature — a corrupt
+        entry is dropped and recompiled, never executed).  ``True`` (or
+        env ``REPRO_VERIFY=1`` when ``None``): every compile
+        additionally runs the full graph-bound pass — fusion
+        re-analysis, routing reconstruction, pallas phase/VMEM
+        contracts — and raises ``VerificationError`` on any error
+        diagnostic."""
+        self.verify = _env_verify() if verify is None else bool(verify)
+        self._check_backend(backend)
         if cache is True:
             self.cache: PlanCache | None = default_cache()
         else:
@@ -89,6 +117,16 @@ class FusionCompiler:
         #: report of the most recent autotune *search* this compiler ran
         #: (None until one runs; cache-served compiles don't update it)
         self.last_autotune: autotune.AutotuneReport | None = None
+
+    @staticmethod
+    def _check_backend(backend: str):
+        """RPL401 — reject unknown backends at the API boundary instead
+        of threading them through to a late codegen failure."""
+        if backend not in KNOWN_BACKENDS:
+            raise VerificationError.single(
+                "RPL401", "config.backend",
+                f"unknown backend {backend!r}",
+                f"valid backends: {', '.join(KNOWN_BACKENDS)}")
 
     # -- stages ------------------------------------------------------------
     def trace(self, script: Callable, input_shapes: dict[str, Sequence[int]]
@@ -113,10 +151,13 @@ class FusionCompiler:
             combo, _ = self._autotune(space, backend or self.backend)
             return combo
         if mode < 0:
-            raise ValueError(f"combination index must be >= 0, got {mode}")
+            raise VerificationError.single(
+                "RPL402", "config.mode",
+                f"combination index must be >= 0, got {mode}")
         combos = scheduler.enumerate_combinations(space, limit=mode + 1)
         if not combos:
-            raise ValueError(
+            raise VerificationError.single(
+                "RPL220", "scheduler",
                 "no legal combination covers the graph (the "
                 "optimization space enumerated empty — every fusion "
                 "impl may have been pruned, e.g. by the VMEM budget)")
@@ -124,7 +165,8 @@ class FusionCompiler:
             # silently clamping would also cache a duplicate plan under
             # this index's key, corrupting compile_all's index<->plan
             # correspondence
-            raise ValueError(
+            raise VerificationError.single(
+                "RPL402", "config.mode",
                 f"combination index {mode} out of range: the space has "
                 f"only {len(combos)} legal combination(s)")
         return combos[mode]
@@ -165,14 +207,16 @@ class FusionCompiler:
         holds, so they would otherwise silently select combination
         index 0/1."""
         if isinstance(mode, bool) or not isinstance(mode, (str, int)):
-            raise ValueError(
+            raise VerificationError.single(
+                "RPL402", "config.mode",
                 f"bad mode {mode!r}: valid modes are "
                 f"{', '.join(repr(m) for m in MODES)}, or an integer "
                 f"rank into the predicted-order combination stream")
         if mode == "autotune":
             return ("autotune", self.autotune_budget)
         if isinstance(mode, str) and mode not in MODES:
-            raise ValueError(
+            raise VerificationError.single(
+                "RPL402", "config.mode",
                 f"unknown mode {mode!r}: valid modes are "
                 f"{', '.join(repr(m) for m in MODES)}, or an integer "
                 f"rank into the predicted-order combination stream")
@@ -288,6 +332,31 @@ class FusionCompiler:
         return hashlib.sha256(payload.encode()).hexdigest()
 
     # -- shared plan resolution ---------------------------------------------
+    def _verify_served_plan(self, plan, g: graph.Graph,
+                            plan_key: str | None) -> bool:
+        """The always-on safety net (DESIGN.md §11): every cache-served
+        plan — in-memory or disk-deserialized, possibly written by
+        another process — is verified BEFORE codegen can execute it.
+        Default depth is the quick subset (structural + signature +
+        coverage, microseconds); under ``verify`` it is the full
+        graph-bound pass.  A rejected plan is *healed*: dropped from
+        memory and disk (so first-writer-wins can republish) and the
+        caller recompiles — never raises, never executes the bad plan.
+        """
+        from ..analysis.checks import verify_plan, verify_plan_quick
+        diags = (verify_plan(plan, g, hw=self.hw) if self.verify
+                 else verify_plan_quick(plan, g))
+        errors = [d for d in diags if d.is_error]
+        if not errors:
+            return True
+        log.warning(
+            "cache-served plan rejected by static verification; healing "
+            "(drop + recompile): %s",
+            "; ".join(d.format() for d in errors))
+        if self.cache is not None and plan_key is not None:
+            self.cache.drop_plan(plan_key)
+        return False
+
     def _plan_for(self, g: graph.Graph, mode, backend: str, mode_key):
         """Plan-cache-consulting search shared by every entry point
         (unbatched / batched / sharded — they key plans identically, so
@@ -300,6 +369,9 @@ class FusionCompiler:
         if cache is not None:
             plan_key = self._plan_key(g, backend, mode_key)
             plan = cache.get_plan(plan_key)
+            if plan is not None and \
+                    not self._verify_served_plan(plan, g, plan_key):
+                plan = None                      # healed: fall through
         if plan is None:
             space = self.space(g)
             if mode == "autotune":
@@ -307,6 +379,12 @@ class FusionCompiler:
             else:
                 combo = self.search(space, mode, backend=backend)
                 plan = build_plan(g, combo, backend=backend)
+            if self.verify:
+                # a freshly searched plan failing the full pass is a
+                # compiler bug, not a stale cache entry — surface it
+                # (and never publish it to the cache)
+                from ..analysis.checks import verify_plan
+                raise_if_errors(verify_plan(plan, g, hw=self.hw))
             if cache is not None:
                 cache.put_plan(plan_key, plan)
         return plan
@@ -360,6 +438,7 @@ class FusionCompiler:
             z, r = prog(w=w, v=v, u=u, alpha=np.float32(0.3))
         """
         backend = backend or self.backend
+        self._check_backend(backend)
         mode_key = self._mode_key(mode)
         if report:
             return self._compile_report(script, input_shapes, mode, backend)
@@ -418,6 +497,7 @@ class FusionCompiler:
             # W/V/U: (8, 1024); z: (8, 1024); r: (8,)
         """
         backend = backend or self.backend
+        self._check_backend(backend)
         mode_key = self._mode_key(mode)
         bucket = bucket or self._bucket_label(input_shapes)
         t0 = time.perf_counter()
@@ -486,6 +566,7 @@ class FusionCompiler:
         if not members:
             raise ValueError("compile_packed needs at least one member")
         backend = backend or self.backend
+        self._check_backend(backend)
         mode_key = self._mode_key(mode)
         t0 = time.perf_counter()
         cache = self.cache
@@ -523,8 +604,27 @@ class FusionCompiler:
                                        for p in packed.members] != \
                     [plan_fingerprint(p) for p in sorted_plans]:
                 packed = None         # foreign entry under our key: rebuild
+            if packed is not None:
+                # always-on pack verification (DESIGN.md §11): member
+                # structure + offset rebasing; under ``verify`` also the
+                # full per-member graph-bound pass.  Heal on rejection.
+                from ..analysis.checks import verify_pack
+                errors = [d for d in verify_pack(
+                    packed, sorted_graphs if self.verify else None,
+                    hw=self.hw) if d.is_error]
+                if errors:
+                    log.warning(
+                        "cache-served packed plan rejected by static "
+                        "verification; healing (drop + rebuild): %s",
+                        "; ".join(d.format() for d in errors))
+                    cache.drop_packed_plan(pack_plan_key)
+                    packed = None
         if packed is None:
             packed = build_packed_plan(plans)
+            if self.verify:
+                from ..analysis.checks import verify_pack
+                raise_if_errors([d for d in verify_pack(
+                    packed, sorted_graphs, hw=self.hw) if d.is_error])
             if cache is not None:
                 cache.put_packed_plan(pack_plan_key, packed)
         prog = codegen.compile_plan_packed(sorted_graphs, packed,
@@ -571,6 +671,7 @@ class FusionCompiler:
             shard_program
 
         backend = backend or self.backend
+        self._check_backend(backend)
         mode_key = self._mode_key(mode)
         bucket = bucket or self._bucket_label(input_shapes)
         sizes = mesh_axis_sizes(mesh)
@@ -641,6 +742,7 @@ class FusionCompiler:
           entries, fewer when the space has fewer legal combinations.
         """
         backend = backend or self.backend
+        self._check_backend(backend)
         cache = self.cache
         g = self.trace(script, input_shapes)
         space = combos = None

@@ -14,6 +14,7 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from .diagnostics import VerificationError
 from .elementary import ArgSpec, Elementary
 
 
@@ -117,7 +118,8 @@ class Graph:
             return
         sa, sb = self.axis_size[ra], self.axis_size[rb]
         if sa != sb:
-            raise ValueError(f"axis size mismatch: {sa} vs {sb}")
+            raise VerificationError.single(
+                "RPL102", "graph", f"axis size mismatch: {sa} vs {sb}")
         self.uf.union(ra, rb)
         self.axis_size[self.uf.find(ra)] = sa
 
@@ -130,7 +132,8 @@ class Graph:
         sizes: list[int | None] = [None] * elem.depth
         for arg, spec in zip(args, elem.in_specs):
             if len(spec.axes) != len(arg.shape):
-                raise ValueError(
+                raise VerificationError.single(
+                    "RPL102", f"graph.calls[{len(self.calls)}]",
                     f"{elem.name}: arg {arg} rank {len(arg.shape)} does not "
                     f"match ArgSpec axes {spec.axes}")
             for dim, ax in enumerate(spec.axes):
@@ -141,11 +144,14 @@ class Graph:
                 else:
                     self._unify(call_axes[ax], aid)
                     if sizes[ax] != arg.shape[dim]:
-                        raise ValueError(
+                        raise VerificationError.single(
+                            "RPL102", f"graph.calls[{len(self.calls)}]",
                             f"{elem.name}: axis {ax} size mismatch "
                             f"{sizes[ax]} vs {arg.shape[dim]}")
         if any(a is None for a in call_axes):
-            raise ValueError(f"{elem.name}: some formal axes unbound by args")
+            raise VerificationError.single(
+                "RPL102", f"graph.calls[{len(self.calls)}]",
+                f"{elem.name}: some formal axes unbound by args")
         node = CallNode(idx=len(self.calls), elem=elem, args=tuple(args),
                         axis_ids=tuple(call_axes), axis_sizes=tuple(sizes))
         out_shape = tuple(sizes[a] for a in elem.out_axes)

@@ -43,6 +43,7 @@ from typing import Callable, Mapping, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from .diagnostics import VerificationError
 from .elementary import Elementary, Monoid, make_map, make_nested_map
 from .graph import Graph, Var
 
@@ -84,7 +85,9 @@ def mask_elementary(monoid: Monoid, rank: int, dim: int) -> Elementary:
             f"mask_{monoid.value}_r2d1",
             lambda x, m: jnp.where(m[..., None, :] != 0, x, ident(x)),
             in_axes=[(0, 1), (1,)], flops_per_point=1, pad_safe=pad_safe)
-    raise ValueError(f"no mask elementary for rank {rank}, dim {dim}")
+    raise VerificationError.single(
+        "RPL131", "masking",
+        f"no mask elementary for rank {rank}, dim {dim}")
 
 
 class MaskedTrace:
@@ -173,14 +176,18 @@ def masked_wrapper(script: Callable,
     dims = {k: tuple(v) for k, v in dims.items()}
     sizes = {shapes[name][d] for name, ds in dims.items() for d in ds}
     if not sizes:
-        raise ValueError("masked_wrapper: no padded dims — nothing to mask")
+        raise VerificationError.single(
+            "RPL130", "masking",
+            "masked_wrapper: no padded dims — nothing to mask")
     if len(sizes) != 1:
-        raise ValueError(
+        raise VerificationError.single(
+            "RPL130", "masking",
             f"padded dims span extents {sorted(sizes)}: one _mask row "
             "cannot cover independent padded axes")
     (bucket,) = sizes
     if MASK_INPUT in shapes:
-        raise ValueError(f"input name {MASK_INPUT!r} is reserved")
+        raise VerificationError.single(
+            "RPL130", "masking", f"input name {MASK_INPUT!r} is reserved")
 
     def wrapped(g, **kw):
         mask = kw.pop(MASK_INPUT)

@@ -38,6 +38,7 @@ import hashlib
 import json
 from typing import Any
 
+from .diagnostics import VerificationError
 from .fusion import analyse_group
 from .graph import Graph, Var
 from .predictor import HardwareModel, Impl, cost_impl
@@ -104,7 +105,9 @@ class ExecutionPlan:
     def from_json(cls, s: str) -> "ExecutionPlan":
         d = json.loads(s)
         if d.get("version") != PLAN_VERSION:
-            raise ValueError(f"plan version {d.get('version')} != {PLAN_VERSION}")
+            raise VerificationError.single(
+                "RPL201", "plan.version",
+                f"plan version {d.get('version')} != {PLAN_VERSION}")
         return cls(signature=d["signature"], backend=d["backend"],
                    dtype=d["dtype"], t_pred=d["t_pred"],
                    groups=tuple(GroupPlan.from_dict(g) for g in d["groups"]),
@@ -144,13 +147,19 @@ class ExecutionPlan:
             impls = plan2.bind(compiler.trace(script, shapes), V5E)
         """
         if graph_signature(g) != self.signature:
-            raise ValueError("plan/graph signature mismatch")
+            raise VerificationError.single(
+                "RPL210", "plan.signature", "plan/graph signature mismatch",
+                "the plan was computed for a different trace; recompile")
         impls: list[Impl] = []
-        for gp in self.groups:
+        for gi, gp in enumerate(self.groups):
             members = [g.calls[i] for i in gp.call_indices]
             f = analyse_group(g, members)
             if f is None:
-                raise ValueError(f"plan group {gp.call_indices} no longer legal")
+                raise VerificationError.single(
+                    "RPL211", f"plan.groups[{gi}]",
+                    f"plan group {gp.call_indices} no longer legal",
+                    "library semantics changed under a stale cache entry; "
+                    "recompile")
             order = tuple(f.axis_roots[p] for p in gp.order_pos)
             impls.append(cost_impl(f, g, order, gp.blocks, hw))
         return impls
@@ -201,8 +210,10 @@ class PackedPlan:
     def __post_init__(self):
         fps = [plan_fingerprint(p) for p in self.members]
         if list(fps) != sorted(fps):
-            raise ValueError("PackedPlan members must be in canonical "
-                             "(sorted-fingerprint) order — use build_packed_plan")
+            raise VerificationError.single(
+                "RPL301", "pack.members",
+                "PackedPlan members must be in canonical "
+                "(sorted-fingerprint) order — use build_packed_plan")
 
     # -- offsets ------------------------------------------------------------
     @property
@@ -283,7 +294,9 @@ class PackedPlan:
     def from_json(cls, s: str) -> "PackedPlan":
         d = json.loads(s)
         if d.get("version") != PACK_VERSION:
-            raise ValueError(f"pack version {d.get('version')} != {PACK_VERSION}")
+            raise VerificationError.single(
+                "RPL302", "pack.version",
+                f"pack version {d.get('version')} != {PACK_VERSION}")
         return cls(members=tuple(ExecutionPlan.from_json(json.dumps(m))
                                  for m in d["members"]),
                    version=d["version"])
@@ -361,7 +374,15 @@ def group_signature(g: Graph, f) -> str:
 def graph_signature(g: Graph) -> str:
     """Hash of the traced program's structure: elementary names, dataflow
     edges, shapes, dtypes, unified axis pattern.  Var names are included
-    only for inputs (they are the call ABI)."""
+    only for inputs (they are the call ABI).
+
+    Memoized on the graph instance: a graph is immutable once traced,
+    and the signature is hashed on every compile (plan cache key) AND by
+    the always-on plan verification (DESIGN.md §11) — computing it twice
+    would double the verifier's overhead for nothing."""
+    sig = getattr(g, "_signature_memo", None)
+    if sig is not None:
+        return sig
     inputs = {v: i for i, v in enumerate(g.inputs)}
 
     def ref(v: Var):
@@ -379,7 +400,9 @@ def graph_signature(g: Graph) -> str:
         "outputs": [ref(v) for v in g.outputs],
     }
     blob = json.dumps(payload, separators=(",", ":")).encode()
-    return hashlib.sha256(blob).hexdigest()
+    sig = hashlib.sha256(blob).hexdigest()
+    g._signature_memo = sig
+    return sig
 
 
 # ---------------------------------------------------------------------------

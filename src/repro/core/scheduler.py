@@ -31,6 +31,7 @@ import dataclasses
 import heapq
 import itertools
 
+from .diagnostics import VerificationError
 from .fusion import Fusion, enumerate_fusions
 from .graph import Graph
 from .predictor import V5E, HardwareModel, Impl, enumerate_impls
@@ -158,7 +159,10 @@ def _reconstruct(space: OptimizationSpace, idx: _SearchIndex,
     mask, impls = 0, []
     while mask != idx.full:
         _, f = memo[mask]
-        assert f is not None, "no legal combination covers the graph"
+        if f is None:
+            raise VerificationError.single(
+                "RPL220", "scheduler",
+                "no legal combination covers the graph")
         impls.append(space.impls_by_fusion[f.key][0])
         for i in f.key:
             mask |= 1 << i
@@ -199,7 +203,9 @@ def _beam_best(space: OptimizationSpace, idx: _SearchIndex,
                 if child == idx.full and (best_final is None
                                           or ncost < best_final[0]):
                     best_final = (ncost, mask)
-    assert best_final is not None, "no legal combination covers the graph"
+    if best_final is None:
+        raise VerificationError.single(
+            "RPL220", "scheduler", "no legal combination covers the graph")
     # walk parents back from the full mask
     chain: list[Fusion] = []
     mask = idx.full
@@ -325,7 +331,8 @@ def unfused_combination(space: OptimizationSpace) -> Combination:
             # build_space drops a singleton when every impl is pruned
             # (e.g. all exceed the VMEM budget) — name the call instead
             # of leaking a bare KeyError
-            raise ValueError(
+            raise VerificationError.single(
+                "RPL221", "scheduler",
                 f"no single-call implementation for call #{i} "
                 f"({call.elem.name}, axes {call.axis_sizes}): every "
                 f"impl was pruned from the optimization space, so the "
@@ -368,5 +375,7 @@ def exhaustive_best_combination(space: OptimizationSpace) -> Combination:
         t = sum(i.t_pred for i in impls)
         if best is None or t < best.t_pred:
             best = Combination(impls=impls, t_pred=t)
-    assert best is not None, "no legal combination covers the graph"
+    if best is None:
+        raise VerificationError.single(
+            "RPL220", "scheduler", "no legal combination covers the graph")
     return best

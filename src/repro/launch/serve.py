@@ -208,7 +208,7 @@ def main(argv=None):
     ap.add_argument("--engine", action="store_true",
                     help="batched ServingEngine (shape buckets + vmap) "
                     "over a mixed-size workload")
-    ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp",
+    ap.add_argument("--backend", default="jnp",
                     help="codegen backend for --blas serving: 'jnp' "
                     "(XLA sub-functions) or 'pallas' (one pallas_call "
                     "per fused group; interpret mode off-TPU)")
@@ -253,6 +253,16 @@ def main(argv=None):
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    # validate against the one authoritative backend set (RPL401) —
+    # argparse `choices` would drift from KNOWN_BACKENDS and exit with
+    # a codeless usage error instead of a diagnostic
+    from repro.core.diagnostics import KNOWN_BACKENDS, VerificationError
+    if args.backend not in KNOWN_BACKENDS:
+        raise VerificationError.single(
+            "RPL401", "cli.--backend",
+            f"unknown backend {args.backend!r}",
+            f"valid backends: {', '.join(KNOWN_BACKENDS)}")
 
     from repro.launch import force_host_devices
     force_host_devices(args.devices)

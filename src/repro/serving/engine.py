@@ -238,6 +238,10 @@ class ServingEngine:
             registry = REGISTRY
         if max_pack < 1:
             raise ValueError(f"max_pack must be >= 1, got {max_pack}")
+        if backend is not None:
+            # RPL401 at the engine boundary: an unknown backend would
+            # otherwise surface requests deep inside a bucket compile
+            FusionCompiler._check_backend(backend)
         self.compiler = compiler or FusionCompiler()
         self.max_batch = max_batch
         self.min_bucket = min_bucket

@@ -1,0 +1,13 @@
+"""Shared test configuration.
+
+Every test runs with the FULL static verifier active (DESIGN.md §11):
+``REPRO_VERIFY=1`` makes each ``FusionCompiler`` constructed without an
+explicit ``verify=`` argument run the graph-bound verification pass on
+every compile — so the whole tier-1 suite doubles as the verifier's
+regression net.  Set at import time (before any test module constructs
+a compiler), and overridable: a test that needs the default-off
+behaviour passes ``verify=False`` explicitly.
+"""
+import os
+
+os.environ.setdefault("REPRO_VERIFY", "1")

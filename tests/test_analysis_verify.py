@@ -1,0 +1,355 @@
+"""Static verifier (repro.analysis, DESIGN.md §11): unit checks,
+compile-path wiring, cache healing, CLI, and the overhead pin."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.analysis import (CODES, Diagnostic, UnsupportedGroupError,
+                            VerificationError, diag, raise_if_errors,
+                            verify_graph, verify_pack, verify_plan,
+                            verify_plan_quick, verify_plan_structural)
+from repro.analysis.cli import lint_cache_dir, main as cli_main
+from repro.core import graph as graph_mod
+from repro.core.cache import PlanCache
+from repro.core.compiler import FusionCompiler
+from repro.core.plan import (ExecutionPlan, build_packed_plan, build_plan,
+                             graph_signature)
+from repro.core.predictor import V5E
+from repro.core.scheduler import best_combination, build_space
+from repro.programs import REGISTRY, make_inputs
+
+
+def _plan_and_graph(name="AXPYDOT", n=128, mode="best", backend="jnp"):
+    prog = REGISTRY[name]
+    g = graph_mod.trace(prog.script, prog.shapes(n))
+    space = build_space(g, V5E)
+    combo = best_combination(space)
+    return build_plan(g, combo, backend=backend), g
+
+
+# ---------------------------------------------------------------------------
+# diagnostic taxonomy
+# ---------------------------------------------------------------------------
+
+def test_diagnostic_codes_registered():
+    d = diag("RPL210", "plan.signature", "mismatch")
+    assert d.severity == "error" and d.is_error
+    assert "RPL210" in d.format() and "plan.signature" in d.format()
+    with pytest.raises(AssertionError):
+        Diagnostic(code="RPL999", severity="error", location="x", message="m")
+    # warn-severity defaults flow from the registry
+    assert not diag("RPL104", "graph", "pad unsound").is_error
+
+
+def test_verification_error_is_value_error():
+    e = VerificationError.single("RPL401", "config", "unknown backend 'x'")
+    assert isinstance(e, ValueError)
+    assert e.codes == ("RPL401",)
+    # the historical codegen contract: unsupported groups double as
+    # NotImplementedError
+    u = UnsupportedGroupError.single("RPL214", "plan.group", "not accumulable")
+    assert isinstance(u, NotImplementedError) and isinstance(u, ValueError)
+    raise_if_errors([diag("RPL104", "g", "warn only")])   # warns never raise
+    with pytest.raises(VerificationError):
+        raise_if_errors([diag("RPL210", "p", "boom")])
+
+
+# ---------------------------------------------------------------------------
+# graph checks
+# ---------------------------------------------------------------------------
+
+def test_verify_graph_clean_on_registry():
+    for name in ("AXPYDOT", "GEMVER", "LM_RMSNORM"):
+        prog = REGISTRY[name]
+        g = graph_mod.trace(prog.script, prog.shapes(128))
+        assert not [d for d in verify_graph(g) if d.is_error], name
+
+
+def test_verify_graph_pad_unsound_is_warning():
+    # LM_DECODE_ATTN mixes max/sum monoids: identity padding is unsound
+    prog = REGISTRY["LM_DECODE_ATTN"]
+    g = graph_mod.trace(prog.script, prog.shapes(128))
+    diags = verify_graph(g)
+    assert [d for d in diags if d.code == "RPL104"]
+    assert not [d for d in diags if d.is_error]
+
+
+def test_verify_graph_rpl105_unmasked_reduce_arg():
+    # a graph carrying the reserved _mask input whose reduction consumes
+    # a padded axis WITHOUT the mask elementary: silent wrong numbers
+    # for padded batches — exactly what RPL105 exists to catch
+    from repro.blas import elementary_lib as lib
+
+    def bad(g, x, _mask):
+        g.apply(lib.ew_mul, x, _mask)        # unifies x's axis with _mask's
+        return (g.apply(lib.sum_reduce, x),)  # reduces the UNMASKED x
+
+    g = graph_mod.trace(bad, {"x": (64,), "_mask": (64,)})
+    codes = {d.code for d in verify_graph(g) if d.is_error}
+    assert "RPL105" in codes
+
+
+def test_verify_graph_masked_wrapper_output_clean():
+    # the masking rewrite's own output must satisfy the RPL105 contract
+    from repro.blas import elementary_lib as lib
+    from repro.core.masking import masked_wrapper, padded_dims
+
+    def script(g, x):
+        s = g.apply(lib.sum_reduce, x, name="s")
+        return (g.apply(lib.scal, s, x, name="o"),)
+
+    shapes = {"x": (64,)}
+    wrapped, wshapes = masked_wrapper(
+        script, shapes, padded_dims(shapes, {"x": (128,)}))
+    g = graph_mod.trace(wrapped, wshapes)
+    assert not [d for d in verify_graph(g) if d.is_error]
+
+
+# ---------------------------------------------------------------------------
+# plan checks
+# ---------------------------------------------------------------------------
+
+def test_verify_plan_clean_both_backends():
+    for backend in ("jnp", "pallas"):
+        plan, g = _plan_and_graph("GEMVER", backend=backend)
+        assert verify_plan(plan, g) == []
+
+
+def test_verify_plan_signature_mismatch():
+    plan, _ = _plan_and_graph("AXPYDOT")
+    other = REGISTRY["VADD"]
+    g2 = graph_mod.trace(other.script, other.shapes(128))
+    codes = {d.code for d in verify_plan_quick(plan, g2)}
+    assert "RPL210" in codes
+
+
+def test_verify_plan_vmem_budget(monkeypatch):
+    plan, g = _plan_and_graph("GEMVER", backend="pallas")
+    assert [d for d in verify_plan(plan, g, vmem_budget=1)
+            if d.code == "RPL215"]
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "1")
+    assert [d for d in verify_plan(plan, g) if d.code == "RPL215"]
+
+
+def test_plan_bind_raises_diagnostics():
+    plan, g = _plan_and_graph("AXPYDOT")
+    other = REGISTRY["VADD"]
+    g2 = graph_mod.trace(other.script, other.shapes(128))
+    with pytest.raises(VerificationError, match="signature mismatch") as ei:
+        plan.bind(g2, V5E)
+    assert ei.value.codes == ("RPL210",)
+
+
+def test_verify_pack_clean_and_canonical():
+    pa, ga = _plan_and_graph("AXPYDOT")
+    pb, gb = _plan_and_graph("VADD")
+    packed = build_packed_plan([pa, pb])
+    graphs = [ga, gb] if packed.members[0] is pa else [gb, ga]
+    assert verify_pack(packed, graphs) == []
+    # non-canonical member order is rejected at construction (RPL301)
+    from repro.core.plan import PackedPlan, plan_fingerprint
+    lo, hi = sorted([pa, pb], key=plan_fingerprint)
+    with pytest.raises(VerificationError, match="canonical") as ei:
+        PackedPlan(members=(hi, lo))
+    assert ei.value.codes == ("RPL301",)
+
+
+# ---------------------------------------------------------------------------
+# compile-path wiring: always-on rejection + healing (the acceptance pin)
+# ---------------------------------------------------------------------------
+
+def _corrupt_disk_plan(tmp_path, mutate):
+    """Compile AXPYDOT against a disk cache, corrupt its one plan entry
+    with ``mutate(plan dict) -> plan dict``, and return the entry path +
+    reference outputs."""
+    prog = REGISTRY["AXPYDOT"]
+    shapes = prog.shapes(64)
+    cc = FusionCompiler(cache=PlanCache(disk_dir=str(tmp_path)),
+                        verify=False)
+    compiled = cc.compile(prog.script, shapes)
+    inputs = make_inputs(prog, 64, seed=3)
+    want = [np.asarray(o) for o in compiled(**inputs)]
+    (entry,) = tmp_path.glob("*.plan.json")
+    d = json.loads(entry.read_text())
+    entry.write_text(json.dumps(mutate(d)))
+    return prog, shapes, inputs, want, entry
+
+
+def test_corrupt_disk_plan_rejected_and_recompiled(tmp_path, caplog):
+    # structurally detectable corruption (a dropped group) must be
+    # caught by the ALWAYS-ON quick subset — verify=False on purpose
+    def drop_group(d):
+        d["groups"] = []
+        d["outputs"] = [["input", d["input_names"][0]]] * len(d["outputs"])
+        return d
+
+    prog, shapes, inputs, want, entry = _corrupt_disk_plan(
+        tmp_path, drop_group)
+    cc2 = FusionCompiler(cache=PlanCache(disk_dir=str(tmp_path)),
+                         verify=False)
+    with caplog.at_level("WARNING", logger="repro.compiler"):
+        compiled = cc2.compile(prog.script, shapes)
+    assert any("rejected by static verification" in r.message
+               for r in caplog.records)
+    got = [np.asarray(o) for o in compiled(**inputs)]
+    for w, o in zip(want, got):
+        np.testing.assert_allclose(o, w, rtol=1e-6)
+    # healed: the corrupt entry was dropped and a fresh valid plan
+    # republished under the same key
+    healed = ExecutionPlan.from_json(entry.read_text())
+    g = graph_mod.trace(prog.script, shapes)
+    assert verify_plan_quick(healed, g) == []
+
+
+def test_swapped_routing_ref_caught_by_full_verify(tmp_path):
+    # the nastiest corruption: refs still RESOLVE (structurally valid,
+    # signature intact — the quick subset passes it) but route the
+    # wrong value.  Pre-verifier this EXECUTED and returned wrong
+    # numbers; the full pass re-derives the routing table and rejects
+    # it (RPL216), and the compile path heals + recompiles.
+    def swap_inputs(d):
+        refs = d["groups"][0]["inputs"]
+        a, b = (i for i, r in enumerate(refs)
+                if r[0] == "input" and r[1] in ("w", "v"))
+        refs[a], refs[b] = refs[b], refs[a]
+        return d
+
+    prog, shapes, inputs, want, entry = _corrupt_disk_plan(
+        tmp_path, swap_inputs)
+    # the corrupted entry really is quick-clean (would have executed)
+    g = graph_mod.trace(prog.script, shapes)
+    bad = ExecutionPlan.from_json(entry.read_text())
+    assert verify_plan_quick(bad, g) == []
+    assert {d.code for d in verify_plan(bad, g) if d.is_error} == {"RPL216"}
+
+    cc2 = FusionCompiler(cache=PlanCache(disk_dir=str(tmp_path)),
+                         verify=True)
+    compiled = cc2.compile(prog.script, shapes)
+    got = [np.asarray(o) for o in compiled(**inputs)]
+    for w, o in zip(want, got):
+        np.testing.assert_allclose(o, w, rtol=1e-6)
+
+
+def test_corrupt_pack_entry_self_heals(tmp_path, caplog):
+    # satellite: a torn/foreign .pack.json must read as a miss (drop +
+    # log + recompile), never raise out of compile_packed
+    a, b = REGISTRY["AXPYDOT"], REGISTRY["VADD"]
+    members = [(a.script, a.shapes(64)), (b.script, b.shapes(64))]
+    cc = FusionCompiler(cache=PlanCache(disk_dir=str(tmp_path)),
+                        verify=False)
+    pack = cc.compile_packed(members)
+    (entry,) = tmp_path.glob("*.pack.json")
+    d = json.loads(entry.read_text())
+    del d["members"][0]["groups"]          # KeyError on from_json — the
+    entry.write_text(json.dumps(d))        # class of corruption that
+    #                                        used to escape the healer
+    cc2 = FusionCompiler(cache=PlanCache(disk_dir=str(tmp_path)),
+                         verify=False)
+    with caplog.at_level("WARNING", logger="repro.cache"):
+        pack2 = cc2.compile_packed(members)
+    assert any("corrupt pack cache entry" in r.message
+               for r in caplog.records)
+    ia = make_inputs(a, 64, seed=1)
+    ib = make_inputs(b, 64, seed=2)
+    batch = lambda d_: {k: np.asarray(v)[None] for k, v in d_.items()}
+    outs1 = pack([batch(ia), batch(ib)])
+    outs2 = pack2([batch(ia), batch(ib)])
+    for m1, m2 in zip(outs1, outs2):
+        for o1, o2 in zip(m1, m2):
+            np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_backend_and_mode_diagnostics():
+    with pytest.raises(VerificationError, match="valid backends") as ei:
+        FusionCompiler(backend="cuda")
+    assert ei.value.codes == ("RPL401",)
+    cc = FusionCompiler()
+    prog = REGISTRY["VADD"]
+    with pytest.raises(VerificationError, match="valid backends"):
+        cc.compile(prog.script, prog.shapes(64), backend="tpu-asm")
+    with pytest.raises(VerificationError, match="valid modes") as ei:
+        cc.compile(prog.script, prog.shapes(64), mode="bestest")
+    assert ei.value.codes == ("RPL402",)
+
+
+def test_serving_engine_backend_diagnostic():
+    from repro.serving import ServingEngine
+    with pytest.raises(VerificationError, match="valid backends") as ei:
+        ServingEngine(backend="cuda", registry=REGISTRY)
+    assert ei.value.codes == ("RPL401",)
+
+
+def test_serve_cli_backend_diagnostic():
+    from repro.launch import serve
+    with pytest.raises(VerificationError, match="valid backends") as ei:
+        serve.main(["--blas", "AXPYDOT", "--backend", "cuda",
+                    "--requests", "1", "--n", "64"])
+    assert ei.value.codes == ("RPL401",)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_quick_clean(capsys):
+    assert cli_main(["--quick"]) == 0
+    out = capsys.readouterr().out
+    assert "OK" in out and "0 errors" in out
+
+
+def test_cli_rejects_unknown_selectors(capsys):
+    assert cli_main(["--programs", "NOPE"]) == 1
+    assert "RPL402" in capsys.readouterr().out
+    assert cli_main(["--backends", "cuda", "--quick"]) == 1
+    assert "RPL401" in capsys.readouterr().out
+
+
+def test_cli_cache_sweep_reports_corruption(tmp_path, capsys):
+    prog = REGISTRY["AXPYDOT"]
+    cc = FusionCompiler(cache=PlanCache(disk_dir=str(tmp_path)),
+                        verify=False)
+    cc.compile(prog.script, prog.shapes(64))
+    (entry,) = tmp_path.glob("*.plan.json")
+    entry.write_text("{not json")
+    (tmp_path / "zz.meas.json").write_text("[1, 2, 3]")
+    diags = lint_cache_dir(str(tmp_path))
+    codes = sorted(d.code for d in diags)
+    assert codes == ["RPL311", "RPL313"]
+    assert all(not d.is_error for d in diags)       # warnings: self-healing
+    # warnings alone keep the lint exit green
+    assert cli_main(["--quick", "--cache-dir", str(tmp_path)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# overhead pin: the always-on subset must stay invisible next to a
+# cached (plan-layer-hit) compile — the PR 1 cache win is load-bearing
+# ---------------------------------------------------------------------------
+
+def test_quick_verify_overhead_under_5pct():
+    prog = REGISTRY["GEMVER"]
+    shapes = prog.shapes(256)
+    cc = FusionCompiler(cache=PlanCache(), verify=False)
+    cc.compile(prog.script, shapes)                  # warm the plan layer
+    g = cc.trace(prog.script, shapes)
+    plan = cc.cache.get_plan(cc._plan_key(g, "jnp", "best"))
+    assert plan is not None
+
+    t_quick = min(
+        _timed(lambda: verify_plan_quick(plan, g)) for _ in range(10))
+
+    def cached_compile():
+        cc.cache._programs.clear()   # force the plan-layer-hit path
+        cc.compile(prog.script, shapes)
+
+    cached_compile()                                 # warm jit caches
+    t_compile = min(_timed(cached_compile) for _ in range(5))
+    ratio = t_quick / t_compile
+    assert ratio < 0.05, (t_quick, t_compile, ratio)
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
